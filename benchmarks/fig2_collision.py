@@ -1,0 +1,71 @@
+"""Paper Fig. 2: (a) collision probability p1 vs r, theory + Monte Carlo;
+(b) query-time exponent rho vs r at eps=3."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import theory
+from repro.core.functions import AHHash, BHHash, EHHash
+
+D = 64
+
+
+def _pair_at_angle(key, theta, d=D):
+    k1, k2 = jax.random.split(key)
+    w = jax.random.normal(k1, (d,))
+    w = w / jnp.linalg.norm(w)
+    r = jax.random.normal(k2, (d,))
+    r = r - (r @ w) * w
+    r = r / jnp.linalg.norm(r)
+    return w, jnp.cos(theta) * w + jnp.sin(theta) * r
+
+
+def empirical_collision(method: str, alpha: float, bits: int = 20000,
+                        seed: int = 0) -> float:
+    theta = np.pi / 2 - alpha
+    w, x = _pair_at_angle(jax.random.PRNGKey(seed), theta)
+    key = jax.random.PRNGKey(seed + 1)
+    if method == "bh":
+        fam = BHHash.create(key, D, bits)
+        return float((fam.signs_query(w[None])
+                      == fam.signs_database(x[None])).mean())
+    if method == "ah":
+        fam = AHHash.create(key, D, 2 * bits)
+        sq = np.asarray(fam.signs_query(w[None]))[0]
+        sx = np.asarray(fam.signs_database(x[None]))[0]
+        return float(((sq[0::2] == sx[0::2]) & (sq[1::2] == sx[1::2])).mean())
+    fam = EHHash.create(key, D, min(bits, 4000))
+    return float((fam.signs_query(w[None])
+                  == fam.signs_database(x[None])).mean())
+
+
+def run(rows=None, eps: float = 3.0):
+    rows = rows if rows is not None else []
+    rs = np.linspace(0.02, 2.0, 8)
+    print("# fig2a: r, then per method theory/empirical collision prob")
+    print("method,r,p1_theory,p1_empirical,abs_err")
+    t0 = time.perf_counter()
+    for r in rs:
+        alpha = float(np.sqrt(r))
+        if alpha > np.pi / 2:
+            continue
+        for m in ("ah", "eh", "bh"):
+            th = float(theory.COLLISION[m](alpha))
+            emp = empirical_collision(m, alpha)
+            print(f"{m},{r:.3f},{th:.4f},{emp:.4f},{abs(th-emp):.4f}")
+            rows.append((f"fig2a_{m}_r{r:.2f}", abs(th - emp)))
+    print("# fig2b: rho = ln p1 / ln p2 at eps=3")
+    print("method,r,rho")
+    for r in np.linspace(0.05, 0.5, 6):
+        for m in ("ah", "eh", "bh"):
+            print(f"{m},{r:.3f},{float(theory.rho(m, r, eps)):.4f}")
+    dt = time.perf_counter() - t0
+    return [("fig2_total_s", dt)]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,88 @@
+"""Paper Figs. 3 & 4: SVM active learning on the 20NG-like and Tiny1M-like
+corpora — MAP learning curves, min-margin curves, nonempty-lookup counts,
+for random / exhaustive / AH / EH / BH / LBH.
+
+Default sizes are CI-scale; --full approaches the paper's scale
+(n=18846/d large for fig3; 1.06M pool for fig4).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.data.synthetic import newsgroups_like, tiny1m_like
+from repro.svm.active import ALConfig, make_selector, run_active_learning
+
+METHODS = ("random", "exhaustive", "ah", "eh", "bh", "lbh")
+
+
+def run_corpus(corpus, bits, radius, iters, lbh_sample, eh_dims=None,
+               svm_steps=15, out_json=None):
+    cfg = ALConfig(iterations=iters, init_per_class=5, svm_steps=svm_steps,
+                   eval_every=max(iters // 5, 1))
+    rows = []
+    results = {}
+    for m in METHODS:
+        sel = make_selector(m, bits=bits, radius=radius,
+                            lbh_sample=lbh_sample, lbh_steps=100,
+                            eh_sample_dims=eh_dims)
+        t0 = time.perf_counter()
+        res = run_active_learning(corpus, sel, cfg)
+        dt = time.perf_counter() - t0
+        total_q = iters * corpus.num_classes
+        print(f"{corpus.name},{m},map_final={res.map_curve[-1]:.4f},"
+              f"map_curve={np.round(res.map_curve, 3).tolist()},"
+              f"margin_mean={res.min_margins.mean():.5f},"
+              f"margin_opt={res.exhaustive_margins.mean():.5f},"
+              f"nonempty={int(res.nonempty.sum())}/{total_q},"
+              f"fit_s={res.fit_seconds:.2f},select_s={res.select_seconds:.2f},"
+              f"total_s={dt:.1f}")
+        rows.append((f"{corpus.name}_{m}_map", float(res.map_curve[-1])))
+        rows.append((f"{corpus.name}_{m}_margin",
+                     float(res.min_margins.mean())))
+        results[m] = {
+            "map_curve": res.map_curve.tolist(),
+            "eval_iters": res.eval_iters.tolist(),
+            "min_margins": res.min_margins.tolist(),
+            "exhaustive_margins": res.exhaustive_margins.tolist(),
+            "nonempty": res.nonempty.tolist(),
+            "fit_s": res.fit_seconds, "select_s": res.select_seconds,
+        }
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(results, f)
+    return rows
+
+
+def run_fig3(full=False, out_json=None):
+    if full:
+        corpus = newsgroups_like(n=18846, d=4000, classes=20)
+        return run_corpus(corpus, bits=16, radius=3, iters=300,
+                          lbh_sample=500, eh_dims=512, out_json=out_json)
+    corpus = newsgroups_like(n=4000, d=500, classes=10, seed=0)
+    return run_corpus(corpus, bits=16, radius=3, iters=25, lbh_sample=300,
+                      eh_dims=128, out_json=out_json)
+
+
+def run_fig4(full=False, out_json=None):
+    if full:
+        corpus = tiny1m_like(n_labeled=60000, n_unlabeled=1000000, d=384)
+        return run_corpus(corpus, bits=20, radius=4, iters=300,
+                          lbh_sample=5000, out_json=out_json)
+    corpus = tiny1m_like(n_labeled=4000, n_unlabeled=20000, d=96, classes=10)
+    return run_corpus(corpus, bits=20, radius=4, iters=15, lbh_sample=600,
+                      out_json=out_json)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--fig", default="both", choices=["3", "4", "both"])
+    args = ap.parse_args()
+    if args.fig in ("3", "both"):
+        run_fig3(args.full, out_json="experiments/fig3.json")
+    if args.fig in ("4", "both"):
+        run_fig4(args.full, out_json="experiments/fig4.json")

@@ -1,0 +1,60 @@
+"""§Roofline table: aggregate the dry-run JSONs into the per-(arch x shape)
+roofline report (single-pod mesh for the table; multi-pod rows prove the pod
+axis shards and add the DCN term)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HEADERS = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+           "bound", "step_floor_s", "compute_frac", "useful_frac",
+           "peak_GiB", "fits_16G")
+
+
+def load(out_dir="experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def row(r):
+    rl = r["roofline"]
+    peak = r["memory"].get("peak_bytes", 0) / 2**30
+    return (r["arch"], r["shape"], r["mesh"],
+            f"{rl['compute_s']:.4g}", f"{rl['memory_s']:.4g}",
+            f"{rl['collective_s']:.4g}", rl["bound"],
+            f"{rl['step_floor_s']:.4g}",
+            f"{rl['compute_fraction']:.3f}",
+            f"{r.get('useful_flops_fraction', 0):.3f}",
+            f"{peak:.2f}", "Y" if peak <= 16 else "N")
+
+
+def markdown(recs, mesh=None):
+    rows = [row(r) for r in recs
+            if mesh is None or r["mesh"] == mesh]
+    out = ["| " + " | ".join(HEADERS) + " |",
+           "|" + "---|" * len(HEADERS)]
+    for r in sorted(rows):
+        out.append("| " + " | ".join(str(c) for c in r) + " |")
+    return "\n".join(out)
+
+
+def run():
+    recs = load()
+    if not recs:
+        print("roofline,no_dryrun_json_found,0,run python -m repro.launch.dryrun --all")
+        return []
+    print(",".join(HEADERS))
+    rows = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print(",".join(str(c) for c in row(r)))
+        rows.append((f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                     r["roofline"]["step_floor_s"]))
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown(load()))

@@ -1,0 +1,61 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows (plus each benchmark's own detailed CSV above them).
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _section(title):
+    print(f"\n### {title}")
+
+
+def main() -> None:
+    from benchmarks import (fig2_collision, fig34_active_learning,
+                            roofline_table, tables_efficiency)
+
+    summary: list[tuple[str, float, str]] = []
+
+    _section("Fig. 2 — collision probability & query exponent")
+    t0 = time.perf_counter()
+    fig2_collision.run()
+    summary.append(("fig2_collision", (time.perf_counter() - t0) * 1e6,
+                    "theory_vs_montecarlo"))
+
+    _section("Fig. 3 — 20NG-like SVM active learning")
+    t0 = time.perf_counter()
+    os.makedirs("experiments", exist_ok=True)
+    fig34_active_learning.run_fig3(out_json="experiments/fig3.json")
+    summary.append(("fig3_al_newsgroups", (time.perf_counter() - t0) * 1e6,
+                    "map/margin/nonempty per method"))
+
+    _section("Fig. 4 — Tiny1M-like SVM active learning")
+    t0 = time.perf_counter()
+    fig34_active_learning.run_fig4(out_json="experiments/fig4.json")
+    summary.append(("fig4_al_tiny1m", (time.perf_counter() - t0) * 1e6,
+                    "map/margin/nonempty per method"))
+
+    _section("Tables 1-3 — efficiency (fit / lookup / scan)")
+    t0 = time.perf_counter()
+    tables_efficiency.run()
+    tables_efficiency.run_kernels()
+    summary.append(("tables_efficiency", (time.perf_counter() - t0) * 1e6,
+                    "per-method timings"))
+
+    _section("Roofline table (from dry-run artifacts)")
+    t0 = time.perf_counter()
+    roofline_table.run()
+    summary.append(("roofline_table", (time.perf_counter() - t0) * 1e6,
+                    "see experiments/dryrun/*.json"))
+
+    _section("summary CSV")
+    print("name,us_per_call,derived")
+    for name, us, derived in summary:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Batched serving example: prefill + greedy decode with KV caches on a
+reduced-config zoo model (prefill/decode at production scale are exercised
+by the dry-run cells).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen2.5-3b
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import REDUCED
+from repro.models.layers import init_params
+from repro.models.transformer import model_spec
+from repro.serve.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=48)
+    args = ap.parse_args()
+
+    cfg = REDUCED[args.arch]
+    if cfg.input_mode != "tokens":
+        raise SystemExit(f"{cfg.name} has a stub frontend; pick a token arch")
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, model_spec(cfg), jnp.float32)
+    engine = Engine(cfg, params, max_len=args.prompt_len + args.gen)
+
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    t0 = time.perf_counter()
+    out = engine.generate(prompts, args.gen)     # compiles on first call
+    jax.block_until_ready(out)
+    t_first = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out = engine.generate(prompts, args.gen)
+    jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    toks = args.batch * args.gen
+    print(f"{cfg.name}: batch={args.batch} gen={args.gen}")
+    print(f"first call (with compile): {t_first:.1f}s; steady: {dt:.2f}s "
+          f"= {toks/dt:.0f} tok/s on CPU")
+    print("sample:", np.asarray(out[0])[:12])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""End-to-end training driver: train a reduced-config zoo model for a few
+hundred steps on CPU with the full substrate (loader, AdamW, checkpointing,
+straggler monitor), then prove checkpoint/restart works.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen3-1.7b --steps 200
+"""
+import argparse
+import os
+import shutil
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import REDUCED
+from repro.data.loader import ShardedLoader
+from repro.data.tokens import SyntheticTokenStream
+from repro.models.layers import init_params
+from repro.models.transformer import model_spec
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.train.step import make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--moment-dtype", default="float32",
+                    choices=["float32", "bfloat16", "int8"])
+    args = ap.parse_args()
+
+    cfg = REDUCED[args.arch]
+    if cfg.input_mode != "tokens":
+        raise SystemExit(f"{cfg.name} has a stub frontend; pick a token arch")
+    ckpt_dir = f"/tmp/repro_example_ckpt_{cfg.name}"
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    params = init_params(jax.random.PRNGKey(0), model_spec(cfg), jnp.float32)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps,
+                          moment_dtype=args.moment_dtype)
+    opt_state = init_opt_state(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=False))
+
+    stream = SyntheticTokenStream(cfg.vocab_size)
+    loader = ShardedLoader(stream, args.batch, args.seq)
+    trainer = Trainer(step_fn, params, opt_state, loader,
+                      TrainerConfig(total_steps=args.steps,
+                                    ckpt_every=args.steps // 2,
+                                    ckpt_dir=ckpt_dir))
+    hist = trainer.run(args.steps // 2)          # first half
+    print(f"[phase 1] loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+    # simulate a failure + restart from checkpoint (fault tolerance)
+    trainer2 = Trainer(step_fn,
+                       jax.tree.map(jnp.zeros_like, params),
+                       init_opt_state(params, opt_cfg), loader,
+                       TrainerConfig(total_steps=args.steps,
+                                     ckpt_every=args.steps // 2,
+                                     ckpt_dir=ckpt_dir))
+    assert trainer2.maybe_restore(), "no checkpoint found"
+    print(f"[restart] restored at step {trainer2.step}")
+    hist2 = trainer2.run(args.steps - trainer2.step)
+    print(f"[phase 2] loss {hist2[0]['loss']:.3f} -> {hist2[-1]['loss']:.3f} "
+          f"(stragglers flagged: {trainer2.monitor.flagged})")
+    loader.close()
+    assert hist2[-1]["loss"] < hist[0]["loss"], "training did not improve"
+    print("OK: loss improved across a checkpoint/restart boundary")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Fault-tolerant checkpointing: atomic step directories, async writes,
+retention, and reshard-on-restore (elastic restarts on a different mesh).
+
+Layout:  <root>/step_<n>/{meta.json, <leaf-id>.npy ...}
+A step directory is written under a tmp name and os.rename'd into place,
+so readers never observe a partial checkpoint; an interrupted save leaves
+only a tmp dir that the next cleanup pass removes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "_".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append((name, leaf))
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3, async_save: bool = True):
+        self.root = root
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(root, exist_ok=True)
+        self._cleanup_tmp()
+
+    # -- save -----------------------------------------------------------------
+    def save(self, step: int, tree, blocking: bool = False):
+        """Snapshot to host memory synchronously, write to disk async."""
+        host = [(n, np.asarray(jax.device_get(l)))
+                for n, l in _leaf_paths(tree)]
+        self.wait()
+        if self.async_save and not blocking:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    def _write(self, step: int, host):
+        tmp = os.path.join(self.root, f".tmp_step_{step}_{os.getpid()}")
+        final = os.path.join(self.root, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        meta = {"step": step, "leaves": [], "time": time.time()}
+        for name, arr in host:
+            fname = f"{name}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            meta["leaves"].append({"name": name, "file": fname,
+                                   "shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)})
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore ----------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        steps = [int(d.split("_")[1]) for d in os.listdir(self.root)
+                 if d.startswith("step_")]
+        return max(steps) if steps else None
+
+    def restore(self, step: int, like_tree, shardings=None):
+        """Load a checkpoint into the structure of `like_tree`.  When
+        `shardings` (same-structure NamedShardings) is given, leaves are
+        device_put with them — this is the elastic path: the target mesh may
+        differ from the mesh the checkpoint was saved under."""
+        d = os.path.join(self.root, f"step_{step}")
+        names = dict(_leaf_paths(like_tree))
+        loaded = {}
+        for name in names:
+            loaded[name] = np.load(os.path.join(d, f"{name}.npy"))
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+        sh_flat = (jax.tree.flatten(shardings)[0] if shardings is not None
+                   else [None] * len(flat))
+        leaves = []
+        for (path, like), sh in zip(flat, sh_flat):
+            name = "_".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path)
+            arr = loaded[name].astype(like.dtype)
+            leaves.append(jax.device_put(arr, sh) if sh is not None
+                          else jax.numpy.asarray(arr))
+        return jax.tree.unflatten(treedef, leaves)
+
+    # -- hygiene ----------------------------------------------------------------
+    def _gc(self):
+        steps = sorted(int(d.split("_")[1]) for d in os.listdir(self.root)
+                       if d.startswith("step_"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s}"),
+                          ignore_errors=True)
+
+    def _cleanup_tmp(self):
+        for d in os.listdir(self.root):
+            if d.startswith(".tmp_step_"):
+                shutil.rmtree(os.path.join(self.root, d), ignore_errors=True)

@@ -1,0 +1,9 @@
+# The paper's primary contribution: compact hyperplane hashing with bilinear
+# functions (BH-Hash / LBH-Hash), the AH/EH baselines, the single-table
+# multi-probe index, and the distributed code scan.
+from repro.core.functions import AHHash, BHHash, EHHash, LBHHash, bilinear_signs
+from repro.core.learning import learn_lbh, similarity_matrix, auto_thresholds
+from repro.core.indexer import HyperplaneIndex, IndexConfig, ActivationIndexer
+from repro.core.tables import SingleHashTable
+from repro.core.search import hamming_topk, hamming_topk_sharded, margin_rerank
+from repro.core import theory

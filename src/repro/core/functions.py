@@ -1,0 +1,201 @@
+"""Randomized hyperplane hash-function families: AH, EH, BH (paper §3).
+
+All families share a convention:
+
+- ``hash_database(X)``: codes for database *points* (rows of X).
+- ``hash_query(W)``:    codes for hyperplane *normals* (rows of W), with the
+  query-side sign conventions of the paper (AH: [sgn(u.w), sgn(-v.w)];
+  EH/BH: h(P_w) = -h(w)).
+
+Sign codes are int8 in {-1, +1}; ``sgn(0) = +1`` throughout (measure-zero
+under the Gaussian draws, but it keeps packing deterministic).
+
+BH-Hash (the paper's contribution, eq. 6/7):
+    h(z) = sgn(u^T z z^T v) = sgn((u.z)(v.z))
+i.e. the XNOR of the two AH bits — one bit per (u, v) pair instead of two.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.bits import pack_signs, flip_packed
+
+
+def _sgn(x):
+    """sign with sgn(0) = +1, as int8."""
+    return jnp.where(x >= 0, 1, -1).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# BH-Hash (bilinear, eq. 6)
+# ---------------------------------------------------------------------------
+
+def sample_bilinear_projections(key, d: int, k: int, dtype=jnp.float32):
+    """k i.i.d. pairs (u_j, v_j) ~ N(0, I_d), returned as (d, k) matrices."""
+    ku, kv = jax.random.split(key)
+    u = jax.random.normal(ku, (d, k), dtype)
+    v = jax.random.normal(kv, (d, k), dtype)
+    return u, v
+
+
+def bilinear_signs(x, u, v):
+    """sgn((X u_j)(X v_j)) for each point/bit.  x: (n, d); u, v: (d, k)."""
+    return _sgn((x @ u) * (x @ v))
+
+
+@dataclasses.dataclass(frozen=True)
+class BHHash:
+    """Randomized Bilinear-Hyperplane Hash family B (eq. 7)."""
+
+    u: jax.Array  # (d, k)
+    v: jax.Array  # (d, k)
+
+    @classmethod
+    def create(cls, key, d: int, k: int, dtype=jnp.float32) -> "BHHash":
+        return cls(*sample_bilinear_projections(key, d, k, dtype))
+
+    @property
+    def k(self) -> int:
+        return self.u.shape[1]
+
+    def signs_database(self, x):
+        return bilinear_signs(x, self.u, self.v)
+
+    def signs_query(self, w):
+        return -bilinear_signs(w, self.u, self.v)  # h(P_w) = -h(w)
+
+    def hash_database(self, x):
+        return pack_signs(self.signs_database(x))
+
+    def hash_query(self, w):
+        return pack_signs(self.signs_query(w))
+
+
+# ---------------------------------------------------------------------------
+# AH-Hash (Jain et al. 2010; eq. 2) — baseline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AHHash:
+    """Angle-Hyperplane Hash: two bits per (u, v) pair.
+
+    k here is the *total* number of bits and must be even; there are k/2
+    (u, v) pairs.  The paper uses 2x the bits of BH/EH for fairness.
+    """
+
+    u: jax.Array  # (d, k//2)
+    v: jax.Array  # (d, k//2)
+
+    @classmethod
+    def create(cls, key, d: int, k: int, dtype=jnp.float32) -> "AHHash":
+        assert k % 2 == 0, "AH-Hash emits bit pairs; k must be even"
+        return cls(*sample_bilinear_projections(key, d, k // 2, dtype))
+
+    @property
+    def k(self) -> int:
+        return 2 * self.u.shape[1]
+
+    def _interleave(self, a, b):
+        # [sgn(u1.z), sgn(v1.z), sgn(u2.z), ...] per the 2-bit structure
+        n, h = a.shape
+        return jnp.stack([a, b], axis=-1).reshape(n, 2 * h)
+
+    def signs_database(self, z):
+        return self._interleave(_sgn(z @ self.u), _sgn(z @ self.v))
+
+    def signs_query(self, w):
+        return self._interleave(_sgn(w @ self.u), _sgn(-(w @ self.v)))
+
+    def hash_database(self, z):
+        return pack_signs(self.signs_database(z))
+
+    def hash_query(self, w):
+        return pack_signs(self.signs_query(w))
+
+
+# ---------------------------------------------------------------------------
+# EH-Hash (Jain et al. 2010; eq. 4) — baseline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EHHash:
+    """Embedding-Hyperplane Hash: sgn(U . vec(z z^T)).
+
+    We keep each of the k projections as a d x d matrix M_j and evaluate
+    z^T M_j z, which is the same inner product without materializing the
+    d^2 embedding.  ``sample_dims`` implements the paper's dimension-sampling
+    speed-up (project onto a random subset of coordinates first).
+    """
+
+    mats: jax.Array  # (k, d, d)
+    dims: jax.Array | None = None  # optional (d_sub,) sampled coordinates
+
+    @classmethod
+    def create(cls, key, d: int, k: int, sample_dims: int | None = None,
+               dtype=jnp.float32) -> "EHHash":
+        km, kd = jax.random.split(key)
+        d_eff = sample_dims or d
+        mats = jax.random.normal(km, (k, d_eff, d_eff), dtype)
+        dims = None
+        if sample_dims is not None:
+            dims = jax.random.choice(kd, d, (sample_dims,), replace=False)
+        return cls(mats, dims)
+
+    @property
+    def k(self) -> int:
+        return self.mats.shape[0]
+
+    def _project(self, z):
+        return z if self.dims is None else z[:, self.dims]
+
+    def _scores(self, z):
+        z = self._project(z)
+        return jnp.einsum("nd,kde,ne->nk", z, self.mats, z)
+
+    def signs_database(self, z):
+        return _sgn(self._scores(z))
+
+    def signs_query(self, w):
+        return _sgn(-self._scores(w))
+
+    def hash_database(self, z):
+        return pack_signs(self.signs_database(z))
+
+    def hash_query(self, w):
+        return pack_signs(self.signs_query(w))
+
+
+# ---------------------------------------------------------------------------
+# Learned bilinear hash (LBH) — same bilinear form, learned projections.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LBHHash(BHHash):
+    """Compact learned bilinear hashing (paper §4).
+
+    Identical evaluation path to BHHash — only the projections differ
+    (they are learned by repro.core.learning.learn_lbh).
+    """
+
+
+FAMILIES = {"ah": AHHash, "eh": EHHash, "bh": BHHash, "lbh": LBHHash}
+
+
+def query_lookup_code(family, w):
+    """Packed code to *look up* in a table built from hash_database codes.
+
+    Searching points near the hyperplane = points whose database code is at
+    maximal Hamming distance from code(w) = minimal distance from the
+    query-side code (which already includes the sign flip).
+    """
+    return family.hash_query(w)
+
+
+def flip_database_code(packed, k: int):
+    """Equivalent formulation used in the paper's step (1): bitwise NOT of
+    H(w) computed database-style."""
+    return flip_packed(packed, k)

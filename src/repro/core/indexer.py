@@ -1,0 +1,158 @@
+"""High-level index API tying together hash families, learning, tables and
+device-side scans — plus the activation indexer that attaches the paper's
+technique to any model-zoo backbone.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import functions as F
+from repro.core import learning as L
+from repro.core.search import hamming_topk, margin_rerank
+from repro.core.tables import SingleHashTable
+
+
+@dataclasses.dataclass
+class IndexConfig:
+    method: str = "lbh"            # ah | eh | bh | lbh
+    bits: int = 20                 # total bits (AH uses bit pairs; keep even)
+    radius: int = 4                # Hamming-ball probe radius
+    seed: int = 0
+    rerank: bool = True            # exact-margin re-rank of candidates
+    max_candidates: int = 4096
+    # LBH learning
+    lbh_sample: int = 1000
+    lbh_steps: int = 150
+    lbh_lr: float = 0.03
+    # EH dimension-sampling trick (paper §5.2); None = exact d^2 embedding
+    eh_sample_dims: int | None = None
+    use_kernels: bool = False      # route hashing through the Pallas kernels
+
+
+@dataclasses.dataclass
+class QueryResult:
+    index: int                    # argmin-margin candidate (or -1)
+    margin: float
+    candidates: np.ndarray        # short-list scanned
+    nonempty: bool                # did the hash lookup return anything?
+    lookup_s: float
+    rerank_s: float
+
+
+class HyperplaneIndex:
+    """Point-to-hyperplane search index (single table, compact codes)."""
+
+    def __init__(self, config: IndexConfig):
+        self.config = config
+        self.family = None
+        self.table: SingleHashTable | None = None
+        self.codes = None          # packed (n, W) uint32, device
+        self.x = None              # (n, d) database, device
+        self.fit_s = 0.0
+
+    # -- build ---------------------------------------------------------------
+    def fit(self, x, learn_key=None) -> "HyperplaneIndex":
+        cfg = self.config
+        t0 = time.perf_counter()
+        x = jnp.asarray(x, jnp.float32)
+        key = jax.random.PRNGKey(cfg.seed) if learn_key is None else learn_key
+        d = x.shape[1]
+        if cfg.method == "ah":
+            self.family = F.AHHash.create(key, d, cfg.bits)
+        elif cfg.method == "eh":
+            self.family = F.EHHash.create(key, d, cfg.bits,
+                                          sample_dims=cfg.eh_sample_dims)
+        elif cfg.method == "bh":
+            self.family = F.BHHash.create(key, d, cfg.bits)
+        elif cfg.method == "lbh":
+            m = min(cfg.lbh_sample, x.shape[0])
+            sel = jax.random.choice(jax.random.fold_in(key, 1), x.shape[0],
+                                    (m,), replace=False)
+            res = L.learn_lbh(key, x[sel], cfg.bits, x_all=x,
+                              steps=cfg.lbh_steps, lr=cfg.lbh_lr)
+            self.family = res.family
+            self.learn_result = res
+        else:
+            raise ValueError(f"unknown method {cfg.method!r}")
+
+        self.x = x
+        self.codes = self._hash_database(x)
+        self.table = SingleHashTable(np.asarray(self.codes), cfg.bits)
+        self.fit_s = time.perf_counter() - t0
+        return self
+
+    def _hash_database(self, x):
+        cfg = self.config
+        if cfg.use_kernels and cfg.method in ("bh", "lbh"):
+            from repro.kernels import ops
+            return ops.bilinear_hash(x, self.family.u, self.family.v)
+        return self.family.hash_database(x)
+
+    # -- query ---------------------------------------------------------------
+    def query(self, w) -> QueryResult:
+        """Paper query path: flip-code table lookup + exact-margin re-rank."""
+        cfg = self.config
+        w = jnp.asarray(w, jnp.float32)
+        t0 = time.perf_counter()
+        qcode = np.asarray(self.family.hash_query(w[None, :]))[0]
+        cand = self.table.lookup(qcode, cfg.radius, cfg.max_candidates)
+        t1 = time.perf_counter()
+        if cand.size == 0:
+            return QueryResult(-1, float("inf"), cand, False, t1 - t0, 0.0)
+        if cfg.rerank:
+            margins, ids = margin_rerank(self.x, w, jnp.asarray(cand), 1)
+            idx, margin = int(ids[0]), float(margins[0])
+        else:
+            idx, margin = int(cand[0]), float("nan")
+        t2 = time.perf_counter()
+        return QueryResult(idx, margin, cand, True, t1 - t0, t2 - t1)
+
+    def query_scan(self, w, l: int = 16):
+        """Device-side scan path (no table): top-l by Hamming distance, then
+        exact re-rank.  This is the path that shards to many nodes
+        (core.search.hamming_topk_sharded) and that kernels/hamming.py
+        accelerates on TPU."""
+        w = jnp.asarray(w, jnp.float32)
+        qcode = self.family.hash_query(w[None, :])[0]
+        if self.config.use_kernels:
+            from repro.kernels import ops
+            _, idx = ops.hamming_topk(self.codes, qcode, l)
+        else:
+            _, idx = hamming_topk(self.codes, qcode, l)
+        margins, ids = margin_rerank(self.x, w, idx, 1)
+        return int(ids[0]), float(margins[0])
+
+
+# ---------------------------------------------------------------------------
+# Activation indexer: the paper's AL pipeline with an LM as feature extractor
+# ---------------------------------------------------------------------------
+
+class ActivationIndexer:
+    """Builds a HyperplaneIndex over pooled backbone activations.
+
+    embed_fn(batch) -> (B, d) pooled embeddings (e.g. mean of final hidden
+    states).  Margin-based selection against a linear probe then identifies
+    the most informative unlabeled items for fine-tuning (the paper's active
+    learning, with the backbone as the representation).
+    """
+
+    def __init__(self, embed_fn, config: IndexConfig, batch_size: int = 64):
+        self.embed_fn = embed_fn
+        self.config = config
+        self.batch_size = batch_size
+        self.index: HyperplaneIndex | None = None
+        self.embeddings = None
+
+    def build(self, corpus) -> HyperplaneIndex:
+        outs = []
+        n = corpus.shape[0]
+        for s in range(0, n, self.batch_size):
+            outs.append(self.embed_fn(corpus[s:s + self.batch_size]))
+        self.embeddings = jnp.concatenate(outs, axis=0)
+        self.index = HyperplaneIndex(self.config).fit(self.embeddings)
+        return self.index

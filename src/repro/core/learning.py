@@ -1,0 +1,140 @@
+"""LBH-Hash learning (paper §4).
+
+Greedy per-bit fitting of the target Gram matrix kS:
+
+    min_{(u_j, v_j)}  || sum_j b_j b_j^T - k S ||_F^2 ,
+    b_j = sgn((X u_j) . (X v_j))     (eq. 13)
+
+solved one bit at a time against the residue R_{j-1} = kS - sum_{j'<j} b b^T
+(eq. 14/15), via the sigmoid-smoothed surrogate
+
+    g~(u, v) = - b~^T R_{j-1} b~ ,   b~_i = phi(u^T x_i x_i^T v)   (eq. 16/17)
+
+with phi(x) = 2/(1+e^-x) - 1 = tanh(x/2), minimized by Nesterov-accelerated
+gradient descent warm-started at the BH random projections (paper uses the
+same warm start so the learning gain over BH is isolated).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.functions import BHHash, LBHHash, _sgn
+
+
+# ---------------------------------------------------------------------------
+# Similarity target S (eq. 12)
+# ---------------------------------------------------------------------------
+
+def abs_cosine(a, b):
+    """|cos| matrix between rows of a (m, d) and rows of b (n, d)."""
+    an = a / jnp.maximum(jnp.linalg.norm(a, axis=1, keepdims=True), 1e-12)
+    bn = b / jnp.maximum(jnp.linalg.norm(b, axis=1, keepdims=True), 1e-12)
+    return jnp.abs(an @ bn.T)
+
+
+def auto_thresholds(x_m, x_all, frac: float = 0.05):
+    """The paper's 5% rule: C = |cos|(X_m, X_all); t1 = mean of per-row
+    top-frac averages, t2 = mean of per-row bottom-frac averages."""
+    c = abs_cosine(x_m, x_all)
+    n = c.shape[1]
+    top = max(1, int(frac * n))
+    s = jnp.sort(c, axis=1)
+    t2 = s[:, :top].mean()
+    t1 = s[:, -top:].mean()
+    return float(t1), float(t2)
+
+
+def similarity_matrix(x_m, t1: float, t2: float):
+    """S_{ii'} per eq. (12): +1 above t1, -1 below t2, else 2|cos|-1."""
+    c = abs_cosine(x_m, x_m)
+    s = 2.0 * c - 1.0
+    s = jnp.where(c >= t1, 1.0, s)
+    s = jnp.where(c <= t2, -1.0, s)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Per-bit surrogate optimization
+# ---------------------------------------------------------------------------
+
+def surrogate_cost(uv, x_m, r):
+    """g~(u, v) = -b~^T R b~ (eq. 16); uv is the stacked [u; v] vector."""
+    d = x_m.shape[1]
+    u, v = uv[:d], uv[d:]
+    b = jnp.tanh(0.5 * (x_m @ u) * (x_m @ v))
+    return -(b @ (r @ b))
+
+
+@partial(jax.jit, static_argnames=("steps",))
+def _nesterov_bit(u0, v0, x_m, r, steps: int, lr: float):
+    """Nesterov's accelerated gradient on g~ for one bit (fixed R)."""
+    uv0 = jnp.concatenate([u0, v0])
+    cost_and_grad = jax.value_and_grad(surrogate_cost)
+    c0 = surrogate_cost(uv0, x_m, r)
+
+    def body(carry, _):
+        x, x_prev, t, best, best_c = carry
+        t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        mu = (t - 1.0) / t_next
+        y = x + mu * (x - x_prev)
+        _, g = cost_and_grad(y, x_m, r)
+        x_new = y - lr * g
+        c = surrogate_cost(x_new, x_m, r)
+        # g~ is nonconvex: keep the best iterate seen, not the last one.
+        better = c < best_c
+        best = jnp.where(better, x_new, best)
+        best_c = jnp.where(better, c, best_c)
+        return (x_new, x, t_next, best, best_c), c
+
+    (_, _, _, uv, _), costs = jax.lax.scan(
+        body, (uv0, uv0, jnp.float32(1.0), uv0, c0), None, length=steps)
+    d = x_m.shape[1]
+    return uv[:d], uv[d:], costs
+
+
+@dataclasses.dataclass
+class LBHResult:
+    family: LBHHash
+    t1: float
+    t2: float
+    bit_costs: jax.Array      # (k, steps) surrogate cost trajectory per bit
+    residue_norms: jax.Array  # (k+1,) ||R_j||_F — must be non-increasing
+
+
+def learn_lbh(key, x_m, k: int, *, t1: float | None = None,
+              t2: float | None = None, x_all=None, steps: int = 150,
+              lr: float = 0.03, dtype=jnp.float32) -> LBHResult:
+    """Learn k bilinear hash functions from m sampled points (paper §4).
+
+    x_m: (m, d) training sample.  If t1/t2 are None they are derived with the
+    paper's 5% rule against x_all (or x_m itself if x_all is None).
+    """
+    x_m = jnp.asarray(x_m, dtype)
+    if t1 is None or t2 is None:
+        t1, t2 = auto_thresholds(x_m, x_m if x_all is None else jnp.asarray(x_all, dtype))
+    s = similarity_matrix(x_m, t1, t2)
+
+    # Warm start at the BH random projections (same key => same projections
+    # as the BHHash baseline, isolating the effect of learning).
+    bh = BHHash.create(key, x_m.shape[1], k, dtype)
+
+    r = k * s
+    us, vs, costs, rnorms = [], [], [], [jnp.linalg.norm(r)]
+    # lr scaling: g~ gradients grow with m; normalize for stable steps.
+    lr_eff = lr / x_m.shape[0]
+    for j in range(k):
+        u, v, cost_j = _nesterov_bit(bh.u[:, j], bh.v[:, j], x_m, r,
+                                     steps, lr_eff)
+        b = _sgn((x_m @ u) * (x_m @ v)).astype(dtype)
+        r = r - jnp.outer(b, b)
+        us.append(u)
+        vs.append(v)
+        costs.append(cost_j)
+        rnorms.append(jnp.linalg.norm(r))
+
+    fam = LBHHash(jnp.stack(us, axis=1), jnp.stack(vs, axis=1))
+    return LBHResult(fam, t1, t2, jnp.stack(costs), jnp.stack(rnorms))

@@ -1,0 +1,90 @@
+"""Single-table, multi-probe hash index (paper §4, query procedure).
+
+The paper's compact regime: one table keyed by k <= ~32 bit codes; a
+hyperplane query w is answered by (1) hashing w query-side (which embeds the
+sign flip, equivalently the bitwise-NOT of its database-style code), (2)
+probing all buckets within a small Hamming radius of that key, (3) re-ranking
+the short candidate list by the exact margin |w.x|/||w||.
+
+Host-side (numpy + dict) by design: bucket maps are pointer-chasing
+structures that belong on the host CPU of each serving node, while the
+scan/re-rank math runs on the accelerator (see core/search.py and
+kernels/hamming.py for the device-side path).
+"""
+from __future__ import annotations
+
+from itertools import combinations
+
+import numpy as np
+
+
+def _key_of(words: np.ndarray) -> int:
+    """Packed uint32 words -> python int key."""
+    out = 0
+    for i, w in enumerate(words):
+        out |= int(w) << (32 * i)
+    return out
+
+
+def hamming_ball_keys(key: int, k: int, radius: int):
+    """All keys within Hamming distance `radius` of `key` over k bits,
+    in nondecreasing distance order (ring by ring)."""
+    yield key
+    for r in range(1, radius + 1):
+        for bits in combinations(range(k), r):
+            probe = key
+            for b in bits:
+                probe ^= (1 << b)
+            yield probe
+
+
+class SingleHashTable:
+    """Bucketed single hash table over packed codes."""
+
+    def __init__(self, packed: np.ndarray, k: int):
+        packed = np.asarray(packed)
+        assert packed.ndim == 2
+        self.k = int(k)
+        self.n = packed.shape[0]
+        self.buckets: dict[int, np.ndarray] = {}
+        keys = np.zeros(self.n, dtype=np.uint64)
+        for i in range(packed.shape[1]):
+            keys |= packed[:, i].astype(np.uint64) << np.uint64(32 * i)
+        order = np.argsort(keys, kind="stable")
+        sorted_keys = keys[order]
+        starts = np.flatnonzero(np.r_[True, sorted_keys[1:] != sorted_keys[:-1]])
+        bounds = np.r_[starts, self.n]
+        for s, e in zip(bounds[:-1], bounds[1:]):
+            self.buckets[int(sorted_keys[s])] = order[s:e]
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.buckets)
+
+    def lookup(self, query_packed: np.ndarray, radius: int,
+               max_candidates: int | None = None) -> np.ndarray:
+        """Candidate indices within `radius` of the query key, nearest rings
+        first.  Empty result => the paper falls back to random selection
+        (handled by the caller)."""
+        key = _key_of(np.asarray(query_packed).reshape(-1))
+        out: list[np.ndarray] = []
+        count = 0
+        for probe in hamming_ball_keys(key, self.k, radius):
+            hit = self.buckets.get(probe)
+            if hit is not None:
+                out.append(hit)
+                count += len(hit)
+                if max_candidates is not None and count >= max_candidates:
+                    break
+        if not out:
+            return np.empty((0,), dtype=np.int64)
+        cand = np.concatenate(out)
+        return cand if max_candidates is None else cand[:max_candidates]
+
+    def stats(self) -> dict:
+        sizes = np.array([len(v) for v in self.buckets.values()])
+        return {
+            "n": self.n, "k": self.k, "buckets": len(self.buckets),
+            "max_bucket": int(sizes.max()) if sizes.size else 0,
+            "mean_bucket": float(sizes.mean()) if sizes.size else 0.0,
+        }

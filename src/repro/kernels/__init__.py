@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   bilinear_hash — fused projection+sign+bitpack database hashing
+#   hamming       — packed-code popcount distance scan (serving hot loop)
+#   lbh_grad      — fused LBH surrogate-gradient chain (eq. 16-18)
+# ops.py holds the jit'd public wrappers; ref.py the pure-jnp oracles.
+from repro.kernels import ops, ref

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: fused bilinear hashing (the paper's hot loop).
+
+codes = pack( sgn((X U) .* (X V)) )          X: (n, d), U, V: (d, k)
+
+One pass produces packed uint32 codes directly:
+  - the two projections run as MXU matmuls over (BN, BD) x (BD, BK) VMEM
+    tiles with f32 accumulation in VMEM scratch across the d-reduction grid
+    axis (innermost, "arbitrary" semantics);
+  - on the last d-step the elementwise product, sign, and 32-way bit pack
+    happen in-register, writing only (BN, BK/32) uint32 to HBM.
+
+HBM traffic is n*d + 2*d*k + n*k/8 bytes — the two (n, k) f32 projection
+intermediates that a composed XLA graph would round-trip never materialize.
+MXU alignment: BN, BK multiples of 128 (lane dim), BD multiple of 128; the
+ops.py wrapper pads inputs so edge tiles stay full.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+WORD = 32
+
+
+def _kernel(x_ref, u_ref, v_ref, out_ref, acc_u, acc_v, *, n_d_steps: int):
+    dstep = pl.program_id(2)
+
+    @pl.when(dstep == 0)
+    def _init():
+        acc_u[...] = jnp.zeros_like(acc_u)
+        acc_v[...] = jnp.zeros_like(acc_v)
+
+    x = x_ref[...]
+    acc_u[...] += jnp.dot(x, u_ref[...], preferred_element_type=jnp.float32)
+    acc_v[...] += jnp.dot(x, v_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(dstep == n_d_steps - 1)
+    def _finalize():
+        prod = acc_u[...] * acc_v[...]                 # (BN, BK)
+        bits = (prod >= 0).astype(jnp.uint32)          # sgn(0) = +1
+        bn, bk = bits.shape
+        bits = bits.reshape(bn, bk // WORD, WORD)
+        weights = jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32)
+        out_ref[...] = (bits * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_n", "block_k", "block_d", "interpret"))
+def bilinear_hash_kernel(x, u, v, *, block_n: int = 256, block_k: int = 128,
+                         block_d: int = 512, interpret: bool = False):
+    """Raw kernel call.  Preconditions (ops.py enforces by padding):
+    n % block_n == 0, d % block_d == 0, k % block_k == 0, block_k % 32 == 0.
+    Returns packed codes (n, k // 32) uint32."""
+    n, d = x.shape
+    k = u.shape[1]
+    grid = (n // block_n, k // block_k, d // block_d)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_d_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_d), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_d, block_k), lambda i, j, s: (s, j)),
+            pl.BlockSpec((block_d, block_k), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_k // WORD),
+                               lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, k // WORD), jnp.uint32),
+        scratch_shapes=[
+            pltpu.VMEM((block_n, block_k), jnp.float32),
+            pltpu.VMEM((block_n, block_k), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, u, v)

@@ -1,0 +1,106 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These handle shape padding (kernels require block-aligned shapes), choose
+interpret mode automatically off-TPU, and compose with lax.top_k / XLA
+matmuls where the MXU/XLA path is already optimal.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bilinear_hash import bilinear_hash_kernel
+from repro.kernels.hamming import hamming_distance_kernel
+from repro.kernels.lbh_grad import lbh_chain_kernel
+from repro.utils.bits import n_words
+
+WORD = 32
+
+
+def _interpret_default(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _pad_to(x, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k", "block_d",
+                                             "interpret"))
+def bilinear_hash(x, u, v, *, block_n: int = 256, block_k: int = 128,
+                  block_d: int = 512, interpret: bool | None = None):
+    """Packed BH/LBH codes for a batch of points.
+
+    x: (n, d); u, v: (d, k).  Returns (n, ceil(k/32)) uint32 — identical to
+    ref.bilinear_hash_ref (pad bits forced to 0).
+    """
+    n, d = x.shape
+    k = u.shape[1]
+    w = n_words(k)
+    x = _pad_to(_pad_to(x.astype(jnp.float32), 0, block_n), 1, block_d)
+    u = _pad_to(_pad_to(u.astype(jnp.float32), 0, block_d), 1, block_k)
+    v = _pad_to(_pad_to(v.astype(jnp.float32), 0, block_d), 1, block_k)
+    packed = bilinear_hash_kernel(
+        x, u, v, block_n=block_n, block_k=block_k, block_d=block_d,
+        interpret=_interpret_default(interpret))
+    packed = packed[:n, :w]
+    # zero-projection pad columns hash to sgn(0)=+1; mask them off so packed
+    # codes match pack_signs semantics (pad bits = 0).
+    rem = k - (w - 1) * WORD
+    if rem < WORD:
+        mask = jnp.uint32((1 << rem) - 1)
+        packed = packed.at[:, -1].set(packed[:, -1] & mask)
+    return packed
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def hamming_distances(codes, query, *, block_n: int = 2048,
+                      interpret: bool | None = None):
+    """(n,) int32 distances between packed code rows and one packed query."""
+    n = codes.shape[0]
+    bn = min(block_n, max(256, n))
+    padded = _pad_to(codes, 0, bn)
+    d = hamming_distance_kernel(padded, query, block_n=bn,
+                                interpret=_interpret_default(interpret))
+    return d[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("l", "block_n", "interpret"))
+def hamming_topk(codes, query, l: int, *, block_n: int = 2048,
+                 interpret: bool | None = None):
+    """Smallest-l Hamming matches: (dists (l,), idx (l,))."""
+    d = hamming_distances(codes, query, block_n=block_n, interpret=interpret)
+    neg, idx = jax.lax.top_k(-d, l)
+    return -neg, idx
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def lbh_chain(p, q, r, *, block_m: int = 512, interpret: bool | None = None):
+    """(s*q, s*p) fused chain; m padded to block_m internally."""
+    m = p.shape[0]
+    bm = min(block_m, max(128, m))
+    pp = _pad_to(p.astype(jnp.float32), 0, bm)
+    qp = _pad_to(q.astype(jnp.float32), 0, bm)
+    rp = _pad_to(_pad_to(r.astype(jnp.float32), 0, bm), 1, bm)
+    sq, sp = lbh_chain_kernel(pp, qp, rp, block_m=bm,
+                              interpret=_interpret_default(interpret))
+    return sq[:m], sp[:m]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def lbh_grad(x, u, v, r, *, block_m: int = 512, interpret: bool | None = None):
+    """Full eq.-18 gradient using the fused chain kernel for the middle."""
+    p = x @ u
+    q = x @ v
+    sq, sp = lbh_chain(p, q, r, block_m=block_m, interpret=interpret)
+    return -(sq @ x), -(sp @ x)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.functions import bilinear_signs
+from repro.utils.bits import pack_signs, hamming_packed
+
+
+def bilinear_hash_ref(x, u, v):
+    """Packed codes: pack(sgn((X U) .* (X V))) -> (n, ceil(k/32)) uint32."""
+    return pack_signs(bilinear_signs(x, u, v))
+
+
+def hamming_distance_ref(codes, query):
+    """(n,) int32 Hamming distances between packed rows and a packed query."""
+    return hamming_packed(codes, query[None, :])
+
+
+def lbh_chain_ref(p, q, r):
+    """(s*q, s*p) with b = tanh(pq/2), s = (R b)(1 - b^2)."""
+    b = jnp.tanh(0.5 * p * q)
+    s = (r @ b) * (1.0 - b * b)
+    return s * q, s * p
+
+
+def lbh_grad_ref(x, u, v, r):
+    """Full surrogate gradient (eq. 18): (-X^T(s*q), -X^T(s*p))."""
+    p = x @ u
+    q = x @ v
+    sq, sp = lbh_chain_ref(p, q, r)
+    return -(sq @ x), -(sp @ x)

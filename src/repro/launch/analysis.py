@@ -1,0 +1,183 @@
+"""Compiled-HLO analysis: FLOPs/bytes from cost_analysis, collective bytes
+parsed from the HLO text, roofline terms against TPU v5e constants.
+
+Ring cost model (per-device interconnect bytes for a group of size g):
+  all-reduce          2 (g-1)/g * |buf|
+  all-gather          (g-1)/g * |result|
+  reduce-scatter      (g-1)/g * |operand| = (g-1) * |result|
+  all-to-all          (g-1)/g * |buf|
+  collective-permute  |buf|
+Collectives whose replica groups span the pod boundary are costed against
+DCN bandwidth instead of ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+
+import numpy as np
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+DCN_BW = 25e9              # bytes/s cross-pod (assumed)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"%?[\w.\-]* = (\([^)]*\)|[\w\[\],{}]+) "
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_info(line: str, n_devices: int, pod_size: int):
+    """(group_size, cross_pod)."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        n_groups, g, dims, perm = (int(m.group(1)), int(m.group(2)),
+                                   [int(x) for x in m.group(3).split(",")],
+                                   m.group(4))
+        cross = False
+        if n_devices > pod_size and g > 1:
+            # iota groups: reshape(arange(N), dims).transpose(perm) then
+            # reshape(n_groups, g); the group dim mixes pods iff consecutive
+            # members differ in the pod coordinate (device id // pod_size).
+            ids = np.arange(int(np.prod(dims))).reshape(dims)
+            if perm:
+                ids = ids.transpose([int(x) for x in perm.split(",")])
+            groups = ids.reshape(n_groups, g)
+            cross = bool((groups // pod_size !=
+                          groups[:, :1] // pod_size).any())
+        return g, cross
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        members = [int(x) for x in m.group(1).split(",") if x.strip()]
+        g = len(members) or 1
+        cross = len({x // pod_size for x in members}) > 1
+        return g, cross
+    return n_devices, n_devices > pod_size
+
+
+def parse_collectives(hlo_text: str, n_devices: int, pod_size: int):
+    """Per-collective records from compiled HLO text."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_sig, op = m.group(1), m.group(2)
+        size = _shape_bytes(result_sig)
+        g, cross = _group_info(line, n_devices, pod_size)
+        if g <= 1:
+            continue
+        if op == "all-reduce":
+            wire = 2 * (g - 1) / g * size
+        elif op == "all-gather":
+            wire = (g - 1) / g * size
+        elif op == "reduce-scatter":
+            wire = (g - 1) * size           # operand = result * g
+        elif op == "all-to-all":
+            wire = (g - 1) / g * size
+        else:                                # collective-permute
+            wire = size
+        out.append({"op": op, "bytes": size, "wire_bytes": wire,
+                    "group": g, "cross_pod": cross})
+    return out
+
+
+def roofline(flops_per_dev: float, bytes_per_dev: float,
+             collectives: list) -> dict:
+    ici = sum(c["wire_bytes"] for c in collectives if not c["cross_pod"])
+    dcn = sum(c["wire_bytes"] for c in collectives if c["cross_pod"])
+    t_compute = flops_per_dev / PEAK_FLOPS
+    t_memory = bytes_per_dev / HBM_BW
+    t_coll = ici / ICI_BW + dcn / DCN_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll, "ici_bytes": ici, "dcn_bytes": dcn}
+    terms["bound"] = max(("compute", t_compute), ("memory", t_memory),
+                         ("collective", t_coll), key=lambda kv: kv[1])[0]
+    # overlapped roofline: the step can't be faster than the max term
+    terms["step_floor_s"] = max(t_compute, t_memory, t_coll)
+    denom = terms["step_floor_s"] or 1.0
+    terms["compute_fraction"] = t_compute / denom
+    return terms
+
+
+def analyze_compiled(compiled, n_devices: int, pod_size: int) -> dict:
+    """Roofline record for one compiled cell.
+
+    FLOPs / HBM bytes / collective bytes come from the trip-count-aware HLO
+    analysis (launch/hlo_stats.py) — XLA's cost_analysis() counts while-loop
+    bodies once, which undercounts scanned models by the layer count; the
+    raw numbers are retained for reference.
+    """
+    from repro.launch.hlo_stats import analyze_hlo
+    ca = compiled.cost_analysis()
+    txt = compiled.as_text()
+    hs = analyze_hlo(txt, n_devices, pod_size)
+    flops = hs["flops"]
+    byts = hs["hbm_bytes"]
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+        mem["peak_bytes"] = (mem["argument_bytes"] + mem["output_bytes"]
+                             + mem["temp_bytes"] - mem["alias_bytes"])
+    except Exception as e:                                 # pragma: no cover
+        mem = {"error": str(e)}
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = hs["ici_bytes"] / ICI_BW + hs["dcn_bytes"] / DCN_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll,
+             "ici_bytes": hs["ici_bytes"], "dcn_bytes": hs["dcn_bytes"]}
+    terms["bound"] = max(("compute", t_compute), ("memory", t_memory),
+                         ("collective", t_coll), key=lambda kv: kv[1])[0]
+    terms["step_floor_s"] = max(t_compute, t_memory, t_coll)
+    denom = terms["step_floor_s"] or 1.0
+    terms["compute_fraction"] = t_compute / denom
+
+    return {
+        "flops_per_device": flops,
+        "bytes_per_device": byts,
+        "raw_cost_analysis": {"flops": float(ca.get("flops", 0.0)),
+                              "bytes": float(ca.get("bytes accessed", 0.0))},
+        "memory": mem,
+        "collectives": hs["collectives"],
+        "top_buffers": hs["top_buffers"],
+        "roofline": terms,
+    }
+
+
+def model_flops(n_active_params: float, tokens: float,
+                kind: str) -> float:
+    """6 N D for train, 2 N D for inference (decode D = batch tokens)."""
+    return (6.0 if kind == "train" else 2.0) * n_active_params * tokens

@@ -1,0 +1,3 @@
+from repro.models.transformer import (forward, decode_step, init_cache,
+                                      model_spec, lm_loss)
+from repro.models.layers import init_params, abstract_params, logical_axes

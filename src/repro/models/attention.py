@@ -1,0 +1,342 @@
+"""Attention blocks: GQA (+qk-norm, qkv-bias, local windows, M-RoPE) and MLA
+(DeepSeek-style multi-head latent attention with compressed KV cache and the
+absorbed decode path).
+
+Layouts: x (B, S, D); q (B, S, H, hd); kv (B, S, K, hd).
+Train/prefill use a memory-efficient online-softmax attention (double
+lax.scan over query/key chunks — "flash" structure, keeps the (S, S) score
+matrix out of HBM and the HLO small for the 512-device dry-run).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (ParamSpec, apply_m_rope, apply_rope,
+                                 apply_norm, norm_spec, rms_norm)
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    q_chunk: int = 512, kv_chunk: int = 512,
+                    q_offset: int = 0):
+    """q: (B, S, H, hd); k, v: (B, Skv, K, hd) with H = K * G.
+
+    Returns (B, S, H, hd).  window=w restricts to the last w keys (sliding);
+    that path slices keys per query chunk so FLOPs stay O(S * (w + cq)).
+    """
+    b, s, h, hd = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    if g > 1:
+        # expand KV to the full head count: the head dim then shards cleanly
+        # over the model axis (a grouped (kh, g) einsum with kh < axis size
+        # forces GSPMD into per-chunk resharding collective-permutes).
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    scale = 1.0 / math.sqrt(hd)
+    cq = min(q_chunk, s)
+    nq = s // cq
+    assert s % cq == 0, (s, cq)
+
+    # §Perf iteration A: keep q/k/v in their storage dtype (bf16) and let the
+    # MXU accumulate in f32 (preferred_element_type) — f32 copies of the
+    # attention operands doubled HBM reads of the largest tensors in the
+    # baseline roofline.
+    qr = q.reshape(b, nq, cq, h, hd)
+
+    if window is not None:
+        return _windowed(qr, k, v, window, cq, q_offset,
+                         scale).reshape(b, s, h, hd)
+
+    ckv = min(kv_chunk, skv)
+    nkv = skv // ckv
+    assert skv % ckv == 0, (skv, ckv)
+    kr = k.reshape(b, nkv, ckv, h, hd)
+    vr = v.reshape(b, nkv, ckv, h, hd)
+
+    def q_step(_, qi_i):
+        qi, i = qi_i                     # (b, cq, h, hd), scalar
+        qpos = q_offset + i * cq + jnp.arange(cq)
+
+        def kv_step(carry, kv_j):
+            m, l, acc = carry
+            kj, vj, j = kv_j
+            kpos = j * ckv + jnp.arange(ckv)
+            s_ij = jnp.einsum("bqhd,bshd->bhqs", qi, kj,
+                              preferred_element_type=jnp.float32) * scale
+            if causal:
+                mask = qpos[:, None] >= kpos[None, :]
+                s_ij = jnp.where(mask[None, None], s_ij, NEG)
+            m_new = jnp.maximum(m, s_ij.max(axis=-1))
+            p = jnp.exp(s_ij - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqs,bshd->bhqd", p, vj.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        init = (jnp.full((b, h, cq), NEG, jnp.float32),
+                jnp.zeros((b, h, cq), jnp.float32),
+                jnp.zeros((b, h, cq, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (kr.swapaxes(0, 1), vr.swapaxes(0, 1),
+                            jnp.arange(nkv)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # (b,h,cq,hd)
+        return None, out.transpose(0, 2, 1, 3)           # (b,cq,h,hd)
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (qr.swapaxes(0, 1), jnp.arange(nq)))
+    # outs: (nq, b, cq, h, hd)
+    out = outs.swapaxes(0, 1).reshape(b, s, h, hd)
+    return out.astype(q.dtype)
+
+
+def _windowed(qr, k, v, window: int, cq: int, q_offset: int, scale: float):
+    """Sliding-window causal attention; per q-chunk the key slice has static
+    length window + cq (FLOPs O(S * (window + cq)), not O(S^2))."""
+    b, nq, _, h, hd = qr.shape
+    span = window + cq
+    # left-pad keys so every chunk slice is in range
+    pad = max(0, span - cq)
+    kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+
+    def q_step(_, qi_i):
+        qi, i = qi_i
+        qpos = q_offset + i * cq + jnp.arange(cq)
+        start = i * cq  # in padded coords this is (i*cq - window) + pad
+        kj = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+        kpos = q_offset + i * cq - window + jnp.arange(span)
+        s_ij = jnp.einsum("bqhd,bshd->bhqs", qi, kj,
+                          preferred_element_type=jnp.float32) * scale
+        mask = ((qpos[:, None] >= kpos[None, :]) &
+                (qpos[:, None] - kpos[None, :] < window) &
+                (kpos[None, :] >= 0))
+        s_ij = jnp.where(mask[None, None], s_ij, NEG)
+        m = s_ij.max(axis=-1, keepdims=True)
+        p = jnp.exp(s_ij - m)
+        out = jnp.einsum("bhqs,bshd->bhqd", p,
+                         vj.astype(jnp.float32)) / jnp.maximum(
+            p.sum(axis=-1), 1e-30)[..., None]
+        return None, out.transpose(0, 2, 1, 3)
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (qr.swapaxes(0, 1), jnp.arange(nq)))
+    return outs.swapaxes(0, 1).astype(k.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def gqa_spec(cfg):
+    d, h, kh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s = {
+        "w_q": ParamSpec((d, h * hd), ("embed", "heads")),
+        "w_k": ParamSpec((d, kh * hd), ("embed", "kv")),
+        "w_v": ParamSpec((d, kh * hd), ("embed", "kv")),
+        "w_o": ParamSpec((h * hd, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["b_q"] = ParamSpec((h * hd,), ("heads",), "zeros")
+        s["b_k"] = ParamSpec((kh * hd,), ("kv",), "zeros")
+        s["b_v"] = ParamSpec((kh * hd,), ("kv",), "zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((hd,), ("null",), "zeros")
+        s["k_norm"] = ParamSpec((hd,), ("null",), "zeros")
+    return s
+
+
+def _project_qkv(cfg, p, x):
+    b, s, _ = x.shape
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["w_q"]
+    k = x @ p["w_k"]
+    v = x @ p["w_v"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["b_q"], k + p["b_k"], v + p["b_v"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kh, hd)
+    v = v.reshape(b, s, kh, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _rope_qk(cfg, q, k, pos):
+    if cfg.m_rope_sections:
+        q = apply_m_rope(q, pos, cfg.rope_theta, cfg.m_rope_sections)
+        k = apply_m_rope(k, pos, cfg.rope_theta, cfg.m_rope_sections)
+    else:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    return q, k
+
+
+def gqa_forward(cfg, p, x, pos, *, window=None, make_cache=False,
+                cache_len: int = 0):
+    """Train / prefill.  pos: (B, S) int or (3, B, S) for M-RoPE."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x)
+    q, k = _rope_qk(cfg, q, k, pos)
+    out = flash_attention(q, k, v, causal=True, window=window)
+    y = out.reshape(b, s, -1) @ p["w_o"]
+    cache = None
+    if make_cache:
+        alloc = min(window, cache_len) if window else cache_len
+        kc = jnp.zeros((b, alloc) + k.shape[2:], k.dtype)
+        vc = jnp.zeros_like(kc)
+        take = min(alloc, s)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k[:, -take:], 0, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v[:, -take:], 0, axis=1)
+        cache = {"k": kc, "v": vc}
+    return y, cache
+
+
+def gqa_decode(cfg, p, x, cache, pos, *, window=None):
+    """One-token decode.  x: (B, 1, D); cache k/v: (B, A, K, hd);
+    pos: scalar int32 (uniform across batch)."""
+    b = x.shape[0]
+    h, kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k, v = _project_qkv(cfg, p, x)     # (B,1,H,hd)/(B,1,K,hd)
+    if cfg.m_rope_sections:
+        p3 = jnp.broadcast_to(pos, (3, b, 1))
+        q, k = _rope_qk(cfg, q, k, p3)
+    else:
+        q, k = _rope_qk(cfg, q, k, jnp.full((b, 1), pos))
+    alloc = cache["k"].shape[1]
+    slot = pos % alloc if window else pos
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+
+    qg = q.reshape(b, kh, h // kh, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg, kc,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(hd)
+    j = jnp.arange(alloc)
+    if window:
+        # slot j holds the largest position <= pos congruent to j (mod alloc)
+        kpos = pos - ((pos - j) % alloc)
+        valid = (kpos >= 0) & (kpos <= pos) & (pos - kpos < window)
+    else:
+        valid = j <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG)
+    attn = jax.nn.softmax(scores, axis=-1).astype(vc.dtype)
+    ctx = jnp.einsum("bkgs,bskh->bkgh", attn, vc,
+                     preferred_element_type=jnp.float32)
+    y = ctx.reshape(b, 1, h * hd).astype(x.dtype) @ p["w_o"]
+    return y, {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# MLA block (DeepSeek-V3 / MiniCPM3)
+# ---------------------------------------------------------------------------
+
+def mla_spec(cfg):
+    d, h = cfg.d_model, cfg.num_heads
+    nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ql, kvl = cfg.q_lora_rank, cfg.kv_lora_rank
+    return {
+        "w_dq": ParamSpec((d, ql), ("embed", "lora")),
+        "q_norm": ParamSpec((ql,), ("null",), "zeros"),
+        "w_uq": ParamSpec((ql, h * (nope + rope_d)), ("lora", "heads")),
+        "w_dkv": ParamSpec((d, kvl + rope_d), ("embed", "lora")),
+        "kv_norm": ParamSpec((kvl,), ("null",), "zeros"),
+        "w_uk": ParamSpec((kvl, h * nope), ("lora", "heads")),
+        "w_uv": ParamSpec((kvl, h * vd), ("lora", "heads")),
+        "w_o": ParamSpec((h * vd, d), ("heads", "embed")),
+    }
+
+
+def _mla_q(cfg, p, x):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    nope, rope_d = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rms_norm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["w_uq"]).reshape(b, s, h, nope + rope_d)
+    return q[..., :nope], q[..., nope:]
+
+
+def _mla_kv_low(cfg, p, x):
+    kvl, rope_d = cfg.kv_lora_rank, cfg.qk_rope_dim
+    low = x @ p["w_dkv"]
+    c_kv = rms_norm(low[..., :kvl], p["kv_norm"], cfg.norm_eps)
+    k_pe = low[..., kvl:]
+    return c_kv, k_pe
+
+
+def mla_forward(cfg, p, x, pos, *, make_cache=False, cache_len: int = 0):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_pe = _mla_q(cfg, p, x)
+    c_kv, k_pe = _mla_kv_low(cfg, p, x)
+    q_pe = apply_rope(q_pe, pos, cfg.rope_theta)
+    k_pe = apply_rope(k_pe[:, :, None, :], pos, cfg.rope_theta)  # (B,S,1,r)
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, nope)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, h, vd)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (b, s, h, rope_d))],
+                        axis=-1)
+    # pad v's head dim up to qk dim for the shared flash kernel, then slice
+    qk_dim = nope + rope_d
+    vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_dim - vd)))
+    out = flash_attention(q, k, vpad, causal=True)[..., :vd]
+    y = out.reshape(b, s, h * vd) @ p["w_o"]
+    cache = None
+    if make_cache:
+        ckv_c = jnp.zeros((b, cache_len, cfg.kv_lora_rank), x.dtype)
+        kpe_c = jnp.zeros((b, cache_len, rope_d), x.dtype)
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(ckv_c, c_kv, 0, axis=1)
+        kpe_c = jax.lax.dynamic_update_slice_in_dim(
+            kpe_c, k_pe[:, :, 0, :], 0, axis=1)
+        cache = {"c_kv": ckv_c, "k_pe": kpe_c}
+    return y, cache
+
+
+def mla_decode(cfg, p, x, cache, pos):
+    """Absorbed decode: cache holds only (c_kv, k_pe); per-step cost is
+    O(S * (kv_lora + rope)) per head — the MLA memory/bandwidth win."""
+    b = x.shape[0]
+    h = cfg.num_heads
+    nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvl = cfg.kv_lora_rank
+    q_nope, q_pe = _mla_q(cfg, p, x)           # (B,1,H,*)
+    c_kv_t, k_pe_t = _mla_kv_low(cfg, p, x)    # (B,1,kvl), (B,1,r)
+    posv = jnp.full((b, 1), pos)
+    q_pe = apply_rope(q_pe, posv, cfg.rope_theta)
+    k_pe_t = apply_rope(k_pe_t[:, :, None, :], posv, cfg.rope_theta)[:, :, 0]
+    ckv_c = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv_t, pos, 1)
+    kpe_c = jax.lax.dynamic_update_slice_in_dim(cache["k_pe"], k_pe_t, pos, 1)
+
+    w_uk = p["w_uk"].reshape(kvl, h, nope)
+    # absorb W_uk into q: (B,H,kvl)
+    q_low = jnp.einsum("bhn,lhn->bhl", q_nope[:, 0], w_uk,
+                       preferred_element_type=jnp.float32)
+    s_low = jnp.einsum("bhl,bsl->bhs", q_low.astype(ckv_c.dtype), ckv_c,
+                       preferred_element_type=jnp.float32)
+    s_pe = jnp.einsum("bhr,bsr->bhs", q_pe[:, 0], kpe_c,
+                      preferred_element_type=jnp.float32)
+    scores = (s_low + s_pe) / math.sqrt(nope + rope_d)
+    valid = jnp.arange(ckv_c.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, :], scores, NEG)
+    attn = jax.nn.softmax(scores, axis=-1).astype(ckv_c.dtype)
+    ctx_low = jnp.einsum("bhs,bsl->bhl", attn, ckv_c,
+                         preferred_element_type=jnp.float32)
+    w_uv = p["w_uv"].reshape(kvl, h, vd)
+    ctx = jnp.einsum("bhl,lhv->bhv", ctx_low.astype(w_uv.dtype), w_uv,
+                     preferred_element_type=jnp.float32)
+    y = ctx.reshape(b, 1, h * vd).astype(x.dtype) @ p["w_o"]
+    return y, {"c_kv": ckv_c, "k_pe": kpe_c}

@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Recurrence (per channel):  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with a_t = exp(c * r_t * log sigmoid(Lambda)),  r_t, i_t input-sigmoid gates.
+
+TPU adaptation (DESIGN.md §3): the recurrence is a first-order *linear* scan,
+so train/prefill use jax.lax.associative_scan (log-depth, VPU-friendly)
+instead of a sequential CUDA-style kernel; decode is the O(1) single-step
+update.  Gate matrices are block-diagonal (as in the Griffin paper), which
+keeps them local to the tensor-parallel shard — no collectives inside the
+recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def rglru_spec(cfg, blocks: int = 16):
+    d, r = cfg.d_model, cfg.rnn_width
+    rb = r // blocks
+    return {
+        "w_gate_branch": ParamSpec((d, r), ("embed", "rnn")),
+        "w_in": ParamSpec((d, r), ("embed", "rnn")),
+        "conv_w": ParamSpec((cfg.conv_width, r), ("null", "rnn")),
+        "conv_b": ParamSpec((r,), ("rnn",), "zeros"),
+        # block-diagonal input/recurrence gates (shard-local)
+        "w_a": ParamSpec((blocks, rb, rb), ("rnn_blocks", "null", "null")),
+        "b_a": ParamSpec((r,), ("rnn",), "zeros"),
+        "w_x": ParamSpec((blocks, rb, rb), ("rnn_blocks", "null", "null")),
+        "b_x": ParamSpec((r,), ("rnn",), "zeros"),
+        "lam": ParamSpec((r,), ("rnn",), "rglru_lambda"),
+        "w_out": ParamSpec((r, d), ("rnn", "embed")),
+    }
+
+
+def _block_diag_matmul(x, w):
+    """x: (..., r) with w: (blocks, rb, rb) block-diagonal."""
+    blocks, rb, _ = w.shape
+    xs = x.reshape(x.shape[:-1] + (blocks, rb))
+    return jnp.einsum("...gi,gij->...gj", xs, w).reshape(x.shape)
+
+
+def _gates(p, xc):
+    """a_t (log-space) and gated input for the recurrence."""
+    r_t = jax.nn.sigmoid(_block_diag_matmul(xc, p["w_a"]) + p["b_a"])
+    i_t = jax.nn.sigmoid(_block_diag_matmul(xc, p["w_x"]) + p["b_x"])
+    log_a = _C * r_t * jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_t * xc)
+    return a, gated
+
+
+def _causal_conv(p, x, state=None):
+    """Depthwise causal conv width cw.  x: (B, S, r).
+    state: (B, cw-1, r) trailing inputs from the previous segment."""
+    cw = p["conv_w"].shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * p["conv_w"][i]
+              for i in range(cw))
+    return out + p["conv_b"], xp[:, -(cw - 1):, :]
+
+
+def rglru_forward(cfg, p, x, *, make_cache=False):
+    """Train/prefill.  x: (B, S, D) -> (B, S, D)."""
+    gate_branch = jax.nn.gelu(x @ p["w_gate_branch"])
+    xi = x @ p["w_in"]
+    xc, conv_state = _causal_conv(p, xi)
+    a, gated = _gates(p, xc.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    h = h.astype(x.dtype)
+    y = (gate_branch * h) @ p["w_out"]
+    cache = None
+    if make_cache:
+        cache = {"h": h[:, -1, :].astype(jnp.float32), "conv": conv_state}
+    return y, cache
+
+
+def rglru_decode(cfg, p, x, cache):
+    """One step.  x: (B, 1, D); cache: {h: (B, r) f32, conv: (B, cw-1, r)}."""
+    gate_branch = jax.nn.gelu(x @ p["w_gate_branch"])
+    xi = x @ p["w_in"]
+    xc, conv_state = _causal_conv(p, xi, cache["conv"])
+    a, gated = _gates(p, xc.astype(jnp.float32))     # (B, 1, r)
+    h = a[:, 0] * cache["h"] + gated[:, 0]
+    y = (gate_branch * h[:, None, :].astype(x.dtype)) @ p["w_out"]
+    return y, {"h": h, "conv": conv_state}
+
+
+def rglru_init_cache(cfg, batch: int, dtype):
+    r, cw = cfg.rnn_width, cfg.conv_width
+    return {"h": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, cw - 1, r), dtype)}

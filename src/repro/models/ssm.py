@@ -1,0 +1,165 @@
+"""Mamba-2 (SSD, state-space duality) mixer block.
+
+TPU adaptation (DESIGN.md §3): the chunked SSD algorithm — intra-chunk
+quadratic term (matmuls, MXU-friendly) + inter-chunk linear state recurrence
+(short scan over chunks) — instead of the GPU selective-scan kernel.
+
+Shapes: d_inner = expand * d_model; heads P = d_inner / headdim; state N.
+x/z from in-projection; B, C shared across heads (n_groups = 1); per-head
+scalar decay dt with A = -exp(A_log) < 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, rms_norm
+
+
+def _dims(cfg):
+    di = cfg.ssm_expand * cfg.d_model
+    heads = di // cfg.ssm_headdim
+    return di, heads, cfg.ssm_state, cfg.ssm_headdim
+
+
+def ssm_spec(cfg):
+    d = cfg.d_model
+    di, heads, n, _ = _dims(cfg)
+    return {
+        "w_zx": ParamSpec((d, 2 * di), ("embed", "rnn")),
+        "w_bc": ParamSpec((d, 2 * n), ("embed", "null")),
+        "w_dt": ParamSpec((d, heads), ("embed", "rnn")),
+        "dt_bias": ParamSpec((heads,), ("rnn",), "zeros"),
+        "conv_x": ParamSpec((cfg.conv_width, di), ("null", "rnn")),
+        "conv_bc": ParamSpec((cfg.conv_width, 2 * n), ("null", "null")),
+        "a_log": ParamSpec((heads,), ("rnn",), "ones"),
+        "d_skip": ParamSpec((heads,), ("rnn",), "ones"),
+        "norm": ParamSpec((di,), ("rnn",), "zeros"),
+        "w_out": ParamSpec((di, d), ("rnn", "embed")),
+    }
+
+
+def _conv(w, x, state=None):
+    cw = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(cw))
+    return jax.nn.silu(out), xp[:, -(cw - 1):, :]
+
+
+def ssd_chunked(xh, dt, a_log, bmat, cmat, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (B, S, P, H) inputs per head; dt: (B, S, P); bmat/cmat: (B, S, N).
+    Returns (y (B,S,P,H), final_state (B,P,N,H)).
+    """
+    b, s, p, hdim = xh.shape
+    n = bmat.shape[-1]
+    l = min(chunk, s)
+    nc = s // l
+    assert s % l == 0, (s, l)
+    a = -jnp.exp(a_log.astype(jnp.float32))          # (P,)
+    da = dt * a                                      # (B, S, P) negative
+    xdt = xh * dt[..., None]                         # B-weighted input
+
+    f32 = jnp.float32
+    xc = xdt.reshape(b, nc, l, p, hdim).astype(f32)
+    dac = da.reshape(b, nc, l, p).astype(f32)
+    bc = bmat.reshape(b, nc, l, n).astype(f32)
+    cc = cmat.reshape(b, nc, l, n).astype(f32)
+
+    cum = jnp.cumsum(dac, axis=2)                    # (B, nc, l, P)
+    # intra-chunk: y_ij = sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) xdt_j
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)       # (B, nc, l, l)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,i,j,P)
+    ii = jnp.arange(l)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    # mask BEFORE exp: exp of the (unused) i<j entries overflows and would
+    # poison gradients through the where.
+    decay = jnp.exp(jnp.where(causal, diff, -1e9))
+    y_intra = jnp.einsum("bcij,bcijp,bcjph->bciph", cb, decay, xc)
+
+    # chunk states: S_c = sum_j exp(cum_last - cum_j) B_j (x)(outer) xdt_j
+    dec_state = jnp.exp(cum[:, :, -1:, :] - cum)     # (B, nc, l, P)
+    states = jnp.einsum("bcjn,bcjp,bcjph->bcpnh", bc, dec_state, xc)
+
+    # inter-chunk recurrence: h_c = exp(sum_c) h_{c-1} + S_c
+    chunk_decay = jnp.exp(cum[:, :, -1, :])          # (B, nc, P)
+
+    def step(h, inp):
+        dec, st = inp                                 # (B,P), (B,P,N,H)
+        h_new = dec[..., None, None] * h + st
+        return h_new, h                               # emit h_{c-1}
+
+    h0 = jnp.zeros((b, p, n, hdim), f32)
+    h_last, h_prevs = jax.lax.scan(
+        step, h0, (chunk_decay.swapaxes(0, 1), states.swapaxes(0, 1)))
+    h_prevs = h_prevs.swapaxes(0, 1)                  # (B, nc, P, N, H)
+
+    # inter-chunk output: C_i exp(cum_i) h_{c-1}
+    y_inter = jnp.einsum("bcin,bcip,bcpnh->bciph",
+                         cc, jnp.exp(cum), h_prevs)
+    y = (y_intra + y_inter).reshape(b, s, p, hdim)
+    return y.astype(xh.dtype), h_last
+
+
+def ssm_forward(cfg, p, x, *, make_cache=False, chunk: int = 256):
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    di, heads, n, hd = _dims(cfg)
+    zx = x @ p["w_zx"]
+    z, xi = zx[..., :di], zx[..., di:]
+    bc_raw = x @ p["w_bc"]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,P)
+    xc, conv_x_state = _conv(p["conv_x"], xi)
+    bcc, conv_bc_state = _conv(p["conv_bc"], bc_raw)
+    bmat, cmat = bcc[..., :n], bcc[..., n:]
+    xh = xc.reshape(b, s, heads, hd)
+    y, h_last = ssd_chunked(xh, dt, p["a_log"], bmat, cmat, chunk)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    cache = None
+    if make_cache:
+        cache = {"h": h_last, "conv_x": conv_x_state,
+                 "conv_bc": conv_bc_state}
+    return out, cache
+
+
+def ssm_decode(cfg, p, x, cache):
+    """One step.  cache: h (B,P,N,H) f32, conv_x (B,cw-1,di), conv_bc."""
+    b = x.shape[0]
+    di, heads, n, hd = _dims(cfg)
+    zx = x @ p["w_zx"]
+    z, xi = zx[..., :di], zx[..., di:]
+    bc_raw = x @ p["w_bc"]
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))[:, 0]  # (B,P)
+    xc, conv_x_state = _conv(p["conv_x"], xi, cache["conv_x"])
+    bcc, conv_bc_state = _conv(p["conv_bc"], bc_raw, cache["conv_bc"])
+    bmat, cmat = bcc[:, 0, :n], bcc[:, 0, n:]         # (B, N)
+    xh = xc[:, 0].reshape(b, heads, hd).astype(jnp.float32)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * a)                             # (B, P)
+    upd = jnp.einsum("bn,bp,bph->bpnh", bmat.astype(jnp.float32),
+                     dt, xh)
+    h = dec[..., None, None] * cache["h"] + upd
+    y = jnp.einsum("bn,bpnh->bph", cmat.astype(jnp.float32), h)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["w_out"], {"h": h, "conv_x": conv_x_state,
+                            "conv_bc": conv_bc_state}
+
+
+def ssm_init_cache(cfg, batch: int, dtype):
+    di, heads, n, hd = _dims(cfg)
+    cw = cfg.conv_width
+    return {"h": jnp.zeros((batch, heads, n, hd), jnp.float32),
+            "conv_x": jnp.zeros((batch, cw - 1, di), dtype),
+            "conv_bc": jnp.zeros((batch, cw - 1, 2 * n), dtype)}

@@ -1,0 +1,376 @@
+"""Model assembly: block definitions, scan-over-layers segmentation, forward
+(train / prefill) and single-token decode with caches.
+
+Layer stacking: homogeneous runs of the layer pattern are stacked and driven
+by jax.lax.scan (keeps HLO size independent of depth — essential for the
+512-device dry-run); pattern remainders and MoE dense preludes are unrolled.
+
+Block kinds:
+  attn / attn_dense — (pre-norm attention) + (pre-norm dense FFN)
+  moe               — (pre-norm attention) + (pre-norm MoE FFN)
+  rec               — (pre-norm RG-LRU recurrent block) + (pre-norm FFN)
+  ssm               — pre-norm Mamba-2 mixer (no separate FFN)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru, ssm
+from repro.models.layers import (ParamSpec, apply_ffn, apply_norm,
+                                 constrain_acts, ffn_spec, norm_spec,
+                                 softmax_xent)
+
+
+# ---------------------------------------------------------------------------
+# block spec / apply
+# ---------------------------------------------------------------------------
+
+def _attn_spec(cfg):
+    return attn.mla_spec(cfg) if cfg.attn_type == "mla" else attn.gqa_spec(cfg)
+
+
+def block_spec(cfg: ArchConfig, kind: str):
+    d = cfg.d_model
+    if kind in ("attn", "attn_dense", "moe"):
+        s = {"ln1": norm_spec(cfg, d), "attn": _attn_spec(cfg),
+             "ln2": norm_spec(cfg, d)}
+        if kind == "moe":
+            s["moe"] = moe_mod.moe_spec(cfg)
+        else:
+            s["ffn"] = ffn_spec(cfg, d, cfg.d_ff)
+        return s
+    if kind == "rec":
+        return {"ln1": norm_spec(cfg, d), "rec": rglru.rglru_spec(cfg),
+                "ln2": norm_spec(cfg, d),
+                "ffn": ffn_spec(cfg, d, cfg.d_ff)}
+    if kind == "ssm":
+        return {"ln1": norm_spec(cfg, d), "ssm": ssm.ssm_spec(cfg)}
+    raise ValueError(kind)
+
+
+def _attn_window(cfg, kind):
+    # local-attention window applies to the attention blocks of hybrid archs
+    return cfg.window if kind == "attn" and cfg.window else None
+
+
+def apply_block(cfg, kind, p, x, pos, *, mode: str, cache=None,
+                cache_len: int = 0):
+    """mode: train | prefill | decode.  Returns (x, new_cache)."""
+    new_cache = None
+    if kind in ("attn", "attn_dense", "moe"):
+        h_in = apply_norm(cfg, p["ln1"], x)
+        if cfg.attn_type == "mla":
+            if mode == "decode":
+                h, new_cache = attn.mla_decode(cfg, p["attn"], h_in, cache, pos)
+            else:
+                h, new_cache = attn.mla_forward(
+                    cfg, p["attn"], h_in, pos, make_cache=(mode == "prefill"),
+                    cache_len=cache_len)
+        else:
+            window = _attn_window(cfg, kind)
+            if mode == "decode":
+                h, new_cache = attn.gqa_decode(cfg, p["attn"], h_in, cache,
+                                               pos, window=window)
+            else:
+                h, new_cache = attn.gqa_forward(
+                    cfg, p["attn"], h_in, pos, window=window,
+                    make_cache=(mode == "prefill"), cache_len=cache_len)
+        x = x + h
+        h2 = apply_norm(cfg, p["ln2"], x)
+        if kind == "moe":
+            x = x + moe_mod.apply_moe(cfg, p["moe"], h2)
+        else:
+            x = x + apply_ffn(cfg, p["ffn"], h2)
+        return x, new_cache
+
+    if kind == "rec":
+        h_in = apply_norm(cfg, p["ln1"], x)
+        if mode == "decode":
+            h, new_cache = rglru.rglru_decode(cfg, p["rec"], h_in, cache)
+        else:
+            h, new_cache = rglru.rglru_forward(
+                cfg, p["rec"], h_in, make_cache=(mode == "prefill"))
+        x = x + h
+        x = x + apply_ffn(cfg, p["ffn"], apply_norm(cfg, p["ln2"], x))
+        return x, new_cache
+
+    if kind == "ssm":
+        h_in = apply_norm(cfg, p["ln1"], x)
+        if mode == "decode":
+            h, new_cache = ssm.ssm_decode(cfg, p["ssm"], h_in, cache)
+        else:
+            h, new_cache = ssm.ssm_forward(
+                cfg, p["ssm"], h_in, make_cache=(mode == "prefill"))
+        return x + h, new_cache
+
+    raise ValueError(kind)
+
+
+def init_block_cache(cfg, kind, batch: int, cache_len: int, dtype):
+    if kind in ("attn", "attn_dense", "moe"):
+        if cfg.attn_type == "mla":
+            return {"c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+                    "k_pe": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype)}
+        window = _attn_window(cfg, kind)
+        alloc = min(window, cache_len) if window else cache_len
+        kh, hd = cfg.num_kv_heads, cfg.head_dim
+        return {"k": jnp.zeros((batch, alloc, kh, hd), dtype),
+                "v": jnp.zeros((batch, alloc, kh, hd), dtype)}
+    if kind == "rec":
+        return rglru.rglru_init_cache(cfg, batch, dtype)
+    if kind == "ssm":
+        return ssm.ssm_init_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# layer segmentation (unrolled prelude | scanned body | unrolled tail)
+# ---------------------------------------------------------------------------
+
+def plan_segments(cfg: ArchConfig):
+    kinds = list(cfg.layer_kinds)
+    n_pre = cfg.first_dense_layers if cfg.num_experts else 0
+    prelude = kinds[:n_pre]
+    rest = kinds[n_pre:]
+    unit = list(cfg.block_pattern)
+    n_rep = len(rest) // len(unit)
+    # verify the repetition actually matches (it does for all assigned archs)
+    if rest[:n_rep * len(unit)] != unit * n_rep:
+        # fall back to fully unrolled
+        return prelude + rest, [], 0, []
+    tail = rest[n_rep * len(unit):]
+    return prelude, unit, n_rep, tail
+
+
+def stack_specs_tree(struct, n: int):
+    from repro.models.layers import stack_specs
+    return stack_specs(struct, n)
+
+
+def model_spec(cfg: ArchConfig):
+    d, v = cfg.d_model, cfg.vocab_size
+    prelude, unit, n_rep, tail = plan_segments(cfg)
+    spec: dict[str, Any] = {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": norm_spec(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        spec["unembed"] = ParamSpec((d, v), ("embed", "vocab"))
+    if prelude:
+        spec["prelude"] = [block_spec(cfg, k) for k in prelude]
+    if n_rep:
+        unit_spec = {f"b{i}": block_spec(cfg, k) for i, k in enumerate(unit)}
+        spec["body"] = stack_specs_tree(unit_spec, n_rep)
+    if tail:
+        spec["tail"] = [block_spec(cfg, k) for k in tail]
+    if cfg.mtp:
+        spec["mtp"] = {
+            "proj": ParamSpec((2 * d, d), ("embed", "embed2")),
+            "norm_h": norm_spec(cfg, d),
+            "norm_e": norm_spec(cfg, d),
+            "block": block_spec(cfg, cfg.block_pattern[-1]),
+            "final_norm": norm_spec(cfg, d),
+        }
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# forward / decode
+# ---------------------------------------------------------------------------
+
+def _sinusoidal(pos, d):
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = pos[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def embed_inputs(cfg, params, batch):
+    """tokens (B, S) or embeds (B, S, D) -> hidden (B, S, D)."""
+    if cfg.input_mode == "tokens":
+        x = params["embed"][batch["tokens"]]
+    else:
+        x = batch["embeds"].astype(params["embed"].dtype)
+    if cfg.family == "audio":   # musicgen: sinusoidal absolute positions
+        s = x.shape[1]
+        x = x + _sinusoidal(jnp.arange(s), cfg.d_model).astype(x.dtype)
+    return x
+
+
+def _positions(cfg, batch, b, s):
+    if cfg.m_rope_sections:
+        if "mrope_positions" in batch:
+            return batch["mrope_positions"]           # (3, B, S)
+        base = jnp.broadcast_to(jnp.arange(s), (b, s))
+        return jnp.broadcast_to(base, (3, b, s))
+    return jnp.broadcast_to(jnp.arange(s), (b, s))
+
+
+def unembed(cfg, params, x):
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return x @ params["unembed"]
+
+
+def forward(cfg: ArchConfig, params, batch, *, mode: str = "train",
+            cache_len: int = 0, remat: bool = False,
+            return_logits: bool = True):
+    """Returns (logits, caches, aux) where caches is None unless prefill."""
+    x = constrain_acts(embed_inputs(cfg, params, batch))
+    b, s, _ = x.shape
+    pos = _positions(cfg, batch, b, s)
+    prelude, unit, n_rep, tail = plan_segments(cfg)
+
+    caches: dict[str, Any] = {}
+    pre_caches, tail_caches = [], []
+    for i, kind in enumerate(prelude):
+        x, c = apply_block(cfg, kind, params["prelude"][i], x, pos,
+                           mode=mode, cache_len=cache_len)
+        x = constrain_acts(x)
+        pre_caches.append(c)
+
+    if n_rep:
+        def unit_apply(x, layer_params):
+            cs = []
+            for i, kind in enumerate(unit):
+                x, c = apply_block(cfg, kind, layer_params[f"b{i}"], x, pos,
+                                   mode=mode, cache_len=cache_len)
+                x = constrain_acts(x)
+                cs.append(c)
+            return x, cs
+
+        if remat:
+            unit_apply = jax.checkpoint(
+                unit_apply, policy=jax.checkpoint_policies.nothing_saveable)
+
+        x, body_caches = jax.lax.scan(unit_apply, x, params["body"])
+        caches["body"] = body_caches if mode == "prefill" else None
+
+    for i, kind in enumerate(tail):
+        x, c = apply_block(cfg, kind, params["tail"][i], x, pos,
+                           mode=mode, cache_len=cache_len)
+        x = constrain_acts(x)
+        tail_caches.append(c)
+
+    h_final = x
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params, x) if return_logits else None
+
+    aux = {"hidden": h_final, "normed": x}
+    if mode == "prefill":
+        caches["prelude"] = pre_caches
+        caches["tail"] = tail_caches
+        return logits, caches, aux
+    return logits, None, aux
+
+
+def decode_step(cfg: ArchConfig, params, inputs, caches, pos):
+    """One decode step.  inputs: tokens (B,) or embeds (B, D);
+    pos: scalar int32.  Returns (logits (B, V), new_caches)."""
+    if cfg.input_mode == "tokens":
+        x = params["embed"][inputs][:, None, :]      # (B, 1, D)
+    else:
+        x = inputs[:, None, :].astype(params["embed"].dtype)
+    if cfg.family == "audio":
+        x = x + _sinusoidal(jnp.array([pos]), cfg.d_model).astype(x.dtype)
+
+    prelude, unit, n_rep, tail = plan_segments(cfg)
+    new_caches: dict[str, Any] = {"prelude": [], "tail": []}
+    for i, kind in enumerate(prelude):
+        x, c = apply_block(cfg, kind, params["prelude"][i], x, pos,
+                           mode="decode", cache=caches["prelude"][i])
+        new_caches["prelude"].append(c)
+
+    if n_rep:
+        def unit_apply(x, scanned):
+            layer_params, layer_cache = scanned
+            cs = []
+            for i, kind in enumerate(unit):
+                x, c = apply_block(cfg, kind, layer_params[f"b{i}"], x, pos,
+                                   mode="decode", cache=layer_cache[i])
+                cs.append(c)
+            return x, cs
+
+        x, body_caches = jax.lax.scan(unit_apply, x,
+                                      (params["body"], caches["body"]))
+        new_caches["body"] = body_caches
+
+    for i, kind in enumerate(tail):
+        x, c = apply_block(cfg, kind, params["tail"][i], x, pos,
+                           mode="decode", cache=caches["tail"][i])
+        new_caches["tail"].append(c)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params, x)[:, 0, :]
+    return logits, new_caches
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype):
+    prelude, unit, n_rep, tail = plan_segments(cfg)
+    caches: dict[str, Any] = {
+        "prelude": [init_block_cache(cfg, k, batch, cache_len, dtype)
+                    for k in prelude],
+        "tail": [init_block_cache(cfg, k, batch, cache_len, dtype)
+                 for k in tail],
+    }
+    if n_rep:
+        unit_cache = [init_block_cache(cfg, k, batch, cache_len, dtype)
+                      for k in unit]
+        caches["body"] = jax.tree.map(
+            lambda c: jnp.broadcast_to(c, (n_rep,) + c.shape), unit_cache)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# losses (incl. deepseek-v3 MTP)
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg: ArchConfig, params, batch, *, remat: bool = False,
+            mtp_weight: float = 0.3, loss_chunk: int = 1024):
+    """Next-token cross entropy (+ MTP auxiliary for deepseek-v3).
+
+    Uses the chunked loss path: the full (B, S, V) logits tensor is never
+    materialized (see layers.chunked_xent)."""
+    from repro.models.layers import chunked_xent
+    _, _, aux = forward(cfg, params, batch, mode="train", remat=remat,
+                        return_logits=False)
+    labels = batch["labels"]
+    unemb = functools.partial(unembed, cfg, params)
+    # shift via -1 padding (ignored positions) so S stays chunk-divisible
+    next_labels = jnp.pad(labels[:, 1:], ((0, 0), (0, 1)),
+                          constant_values=-1)
+    loss = chunked_xent(aux["normed"], next_labels, unemb, chunk=loss_chunk)
+    if cfg.mtp and "mtp" in params:
+        p = params["mtp"]
+        h = aux["hidden"]                            # (B, S, D)
+        if cfg.input_mode == "tokens":
+            nxt = params["embed"][batch["tokens"]]
+        else:
+            nxt = batch["embeds"].astype(h.dtype)
+        # combine h_t with the embedding of token t+1 to predict token t+2;
+        # shifts are implemented with padding so S stays chunk-divisible.
+        hh = apply_norm(cfg, p["norm_h"], h)
+        ee_next = jnp.pad(nxt[:, 1:], ((0, 0), (0, 1), (0, 0)))
+        ee = apply_norm(cfg, p["norm_e"], ee_next)
+        z = jnp.concatenate([hh, ee], axis=-1) @ p["proj"]
+        b, s2, _ = z.shape
+        pos = jnp.broadcast_to(jnp.arange(s2), (b, s2))
+        if cfg.m_rope_sections:
+            pos = jnp.broadcast_to(pos, (3, b, s2))
+        z, _ = apply_block(cfg, cfg.block_pattern[-1], p["block"], z, pos,
+                           mode="train")
+        z = apply_norm(cfg, p["final_norm"], z)
+        mtp_labels = jnp.pad(labels[:, 2:], ((0, 0), (0, 2)),
+                             constant_values=-1)
+        mtp_loss = chunked_xent(z, mtp_labels, unemb, chunk=loss_chunk)
+        loss = loss + mtp_weight * mtp_loss
+    return loss

@@ -1,0 +1,46 @@
+"""Compressed cross-replica gradient synchronization (int8 + error feedback).
+
+For the pure-DP path (shard_map trainers, and the pod axis of hierarchical
+DP at >1-pod scale) the gradient all-reduce can run on int8 codes + per-block
+f32 scales: 4x fewer interconnect bytes than f32 with bounded error thanks
+to error feedback (the quantization residual is carried into the next step,
+so the bias telescopes instead of accumulating).
+
+Under a pjit train step the DP all-reduce is XLA-inserted and not
+addressable; this module is used by the shard_map DP trainer
+(launch/train.py --dp=shard_map) and is unit-tested for the error-feedback
+convergence property.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import quantize_blockwise, dequantize_blockwise
+
+
+def compressed_psum(grads, residuals, axis_name: str):
+    """Quantize (grads + residuals) to int8 blocks, psum the codes, and
+    return (mean grads f32, new residuals).  Runs inside shard_map/pmap."""
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, s = quantize_blockwise(g32)
+        new_r = g32 - dequantize_blockwise(q, s)       # error feedback
+        # int8 codes + f32/256 block scales cross the wire (~1.02 bytes/elem
+        # instead of 4); dequantize+sum happens after the gather.
+        qs = jax.lax.all_gather(q, axis_name)          # (n, ..., L) i8
+        ss = jax.lax.all_gather(s, axis_name)          # (n, ..., L/256)
+        summed = dequantize_blockwise(qs, ss).sum(axis=0)
+        return summed / n, new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

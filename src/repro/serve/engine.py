@@ -1,0 +1,64 @@
+"""Batched serving: prefill + single-token decode steps and a host-side
+generation loop (used by examples/serve_lm.py and the serve dry-run cells).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import decode_step, forward, init_cache
+
+
+def make_prefill_step(cfg: ArchConfig, cache_len: int):
+    def prefill(params, batch):
+        logits, caches, _ = forward(cfg, params, batch, mode="prefill",
+                                    cache_len=cache_len)
+        return logits[:, -1, :], caches
+    return prefill
+
+
+def make_serve_step(cfg: ArchConfig, *, sample: bool = False):
+    """serve_step(params, caches, inputs, pos[, key]) -> (next, caches).
+
+    inputs: tokens (B,) int32 (or embeds (B, D) for stub-frontend archs);
+    pos: scalar int32 — position being written this step.
+    """
+    if sample:
+        def serve_step(params, caches, inputs, pos, key):
+            logits, caches = decode_step(cfg, params, inputs, caches, pos)
+            nxt = jax.random.categorical(key, logits.astype(jnp.float32))
+            return nxt.astype(jnp.int32), caches
+        return serve_step
+
+    def serve_step(params, caches, inputs, pos):
+        logits, caches = decode_step(cfg, params, inputs, caches, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), caches
+    return serve_step
+
+
+class Engine:
+    """Minimal batched-request engine for the runnable examples."""
+
+    def __init__(self, cfg: ArchConfig, params, max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(make_prefill_step(cfg, max_len))
+        self._step = jax.jit(make_serve_step(cfg))
+
+    def generate(self, prompts, steps: int):
+        """prompts: (B, S0) int32.  Greedy-decodes `steps` tokens."""
+        b, s0 = prompts.shape
+        batch = {"tokens": prompts}
+        last_logits, caches = self._prefill(self.params, batch)
+        nxt = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+        out = [nxt]
+        for i in range(steps - 1):
+            nxt, caches = self._step(self.params, caches, nxt,
+                                     jnp.int32(s0 + i))
+            out.append(nxt)
+        return jnp.stack(out, axis=1)

@@ -1,0 +1,116 @@
+"""Logical-axis -> mesh-axis rules (GSPMD partitioning of the model zoo).
+
+Parallelism map (DESIGN.md §4):
+  DP   : batch over ("pod", "data")
+  FSDP : the params' `embed`/`expert_embed` logical axes over "data"
+  TP   : `ffn` / `heads` / `kv` / `vocab` / `rnn` over "model"
+  EP   : `experts` over "model" (deepseek-v3 overrides to ("data","model") —
+         pure EP over the whole mesh so 256 experts and the bulk of the
+         671B parameters shard 256-ways)
+  SP   : sequence over "data" for small-batch long-context cells
+
+Rules are tables so per-arch / per-experiment overrides are plain dict
+updates — every hillclimb iteration on sharding edits exactly one entry.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+DEFAULT_PARAM_RULES: dict[str, tuple[str, ...]] = {
+    "embed": ("data",),          # FSDP
+    "expert_embed": ("data",),
+    "ffn": ("model",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "rnn": ("model",),
+    "rnn_blocks": ("model",),
+    "lora": (),
+    "embed2": (),
+    "null": (),
+    "layers": (),
+}
+
+ARCH_RULE_OVERRIDES: dict[str, dict[str, tuple[str, ...]]] = {
+    # 256 experts x (3 matmuls x 7168 x 2048) dominate the 671B params:
+    # shard experts over the whole mesh (EP=256/512), keep their embed dim
+    # unsharded (it is the contraction dim of the expert matmuls).
+    "deepseek-v3-671b": {"experts": ("data", "model"), "expert_embed": ()},
+    # kv dim (kv_heads*head_dim = 256) is far below the 16-way model axis:
+    # replicating the small kv projections avoids sub-head splits.
+    "qwen2.5-3b": {"kv": ()},
+    "qwen2-vl-7b": {"kv": ()},
+    "recurrentgemma-2b": {"kv": ()},   # kv=1 head
+}
+
+
+def param_rules(cfg: ArchConfig) -> dict[str, tuple[str, ...]]:
+    rules = dict(DEFAULT_PARAM_RULES)
+    rules.update(ARCH_RULE_OVERRIDES.get(cfg.name, {}))
+    return rules
+
+
+def _filter_axes(axes: tuple[str, ...], mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def spec_for(axes: tuple[str, ...], rules, mesh: Mesh, shape) -> P:
+    """PartitionSpec for one param: logical axes -> mesh axes, dropping
+    assignments that do not divide the dim (GSPMD would pad; we prefer
+    replication for clean roofline accounting)."""
+    used: set[str] = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        mesh_axes = _filter_axes(rules.get(ax, ()), mesh)
+        mesh_axes = tuple(a for a in mesh_axes if a not in used)
+        size = 1
+        for a in mesh_axes:
+            size *= mesh.shape[a]
+        if mesh_axes and dim % size == 0:
+            out.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+            used.update(mesh_axes)
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_shardings(logical_tree, rules, mesh: Mesh, shapes_tree):
+    """Tree of NamedShardings matching the param tree."""
+    def one(axes, arr):
+        return NamedSharding(mesh, spec_for(axes, rules, mesh, arr.shape))
+    return jax.tree.map(one, logical_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(a, str) for a in x))
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh, global_batch: int, ndim: int,
+               seq_dim: int | None = None, seq_len: int = 0) -> P:
+    """Sharding for a (B, ...) input: batch over (pod, data) when divisible,
+    else fall back to sequence sharding over data (SP), else replicate."""
+    dp = data_axes(mesh)
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    if global_batch % size == 0 and global_batch >= size:
+        parts = [dp if len(dp) > 1 else dp[0]] + [None] * (ndim - 1)
+        return P(*parts)
+    if seq_dim is not None and "data" in mesh.axis_names \
+            and seq_len % mesh.shape["data"] == 0:
+        parts: list = [None] * ndim
+        parts[seq_dim] = "data"
+        return P(*parts)
+    return P()
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,3 @@
+from repro.svm.linear_svm import train_svm, train_ova, average_precision, svm_loss
+from repro.svm.active import (ALConfig, ALResult, run_active_learning,
+                              make_selector)

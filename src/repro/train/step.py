@@ -1,0 +1,68 @@
+"""Train-step factory: grad-accumulation microbatching, remat, AdamW.
+
+Pipeline-parallel note (DESIGN.md §4): at <=512 chips every assigned arch
+fits via FSDP+TP+EP, so PP is not enabled; the scan-over-layers body is the
+natural stage boundary if ever needed (slice params["body"] along the
+stacked `layers` axis into per-stage scans connected by collective_permute).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import lm_loss
+from repro.optim.adamw import AdamWConfig, apply_updates
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, *,
+                    num_microbatches: int = 1, remat: bool = True,
+                    accum_dtype=jnp.float32):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    batch leaves have a leading global-batch dim; with num_microbatches > 1
+    the step scans over microbatches accumulating grads (exposes the
+    compute/communication overlap window and caps activation memory).
+    """
+
+    def loss_fn(params, mbatch):
+        return lm_loss(cfg, params, mbatch, remat=remat)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0] if x.ndim >= 1 else 0
+                if x.ndim >= 2 and x.shape[0] == 3:   # (3, B, S) mrope
+                    return x.reshape(3, num_microbatches, -1, *x.shape[2:]) \
+                        .swapaxes(0, 1)
+                return x.reshape(num_microbatches, -1, *x.shape[1:])
+
+            mbatches = jax.tree.map(split, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                              params)
+
+            def mb_step(carry, mbatch):
+                gacc, lacc = carry
+                loss, g = grad_fn(params, mbatch)
+                gacc = jax.tree.map(
+                    lambda a, x: a + x.astype(accum_dtype), gacc, g)
+                return (gacc, lacc + loss), None
+
+            (gacc, lsum), _ = jax.lax.scan(
+                mb_step, (g0, jnp.float32(0)), mbatches)
+            grads = jax.tree.map(lambda gg: gg / num_microbatches, gacc)
+            loss = lsum / num_microbatches
+
+        params, opt_state, metrics = apply_updates(params, grads, opt_state,
+                                                   opt_cfg)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step

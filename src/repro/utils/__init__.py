@@ -1,0 +1,1 @@
+from repro.utils.bits import pack_signs, unpack_signs, popcount_u32, hamming_packed

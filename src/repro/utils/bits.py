@@ -1,0 +1,76 @@
+"""Bit-level helpers shared by the hashing core and the kernels.
+
+Conventions
+-----------
+- "signs"  : int8 arrays in {-1, +1}, shape (..., k).
+- "packed" : uint32 arrays, shape (..., W) with W = ceil(k / 32); bit j of
+  word w is sign bit (32*w + j) mapped +1 -> 1, -1 -> 0.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+WORD = 32
+
+
+def n_words(k: int) -> int:
+    return (k + WORD - 1) // WORD
+
+
+def pack_signs(signs):
+    """Pack {-1,+1} signs (..., k) into uint32 words (..., ceil(k/32))."""
+    k = signs.shape[-1]
+    w = n_words(k)
+    pad = w * WORD - k
+    bits = (signs > 0).astype(jnp.uint32)
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), jnp.uint32)], axis=-1)
+    bits = bits.reshape(bits.shape[:-1] + (w, WORD))
+    weights = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32))
+    return (bits * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def unpack_signs(packed, k: int):
+    """Inverse of pack_signs -> int8 signs (..., k)."""
+    w = packed.shape[-1]
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(packed.shape[:-1] + (w * WORD,))[..., :k]
+    return (bits.astype(jnp.int8) * 2 - 1)
+
+
+def popcount_u32(x):
+    """SWAR popcount for uint32 arrays (the same trick the Pallas kernel uses)."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def hamming_packed(a, b):
+    """Hamming distance between packed codes; broadcasts leading dims.
+
+    a: (..., W), b: (..., W) -> (...,) int32.
+    """
+    return popcount_u32(jnp.bitwise_xor(a, b)).sum(axis=-1)
+
+
+def flip_packed(packed, k: int):
+    """Bitwise NOT restricted to the low k bits (the paper's query-code flip)."""
+    w = packed.shape[-1]
+    full = jnp.full(packed.shape, 0xFFFFFFFF, jnp.uint32)
+    out = jnp.bitwise_xor(packed, full)
+    # mask off pad bits in the last word so distances stay in [0, k]
+    rem = k - (w - 1) * WORD
+    mask = jnp.uint32((1 << rem) - 1 if rem < WORD else 0xFFFFFFFF)
+    last = out[..., -1] & mask
+    return out.at[..., -1].set(last)
+
+
+def np_hamming_packed(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """NumPy oracle for tests."""
+    x = np.bitwise_xor(a.astype(np.uint32), b.astype(np.uint32))
+    return np.unpackbits(x.view(np.uint8), axis=-1).sum(axis=-1).astype(np.int32)

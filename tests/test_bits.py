@@ -1,0 +1,50 @@
+"""Bit-packing and popcount invariants (property tests)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.utils.bits import (flip_packed, hamming_packed, n_words,
+                              np_hamming_packed, pack_signs, popcount_u32,
+                              unpack_signs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 100), st.integers(0, 2**31 - 1))
+def test_pack_roundtrip(n, k, seed):
+    rng = np.random.default_rng(seed)
+    signs = jnp.asarray(rng.choice([-1, 1], (n, k)).astype(np.int8))
+    packed = pack_signs(signs)
+    assert packed.shape == (n, n_words(k))
+    assert (unpack_signs(packed, k) == signs).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_popcount_matches_python(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 2**32, (64,), dtype=np.uint32)
+    got = np.asarray(popcount_u32(jnp.asarray(x)))
+    want = np.array([bin(int(v)).count("1") for v in x])
+    assert (got == want).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 80), st.integers(0, 2**31 - 1))
+def test_hamming_identities(k, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.choice([-1, 1], (7, k)).astype(np.int8))
+    b = jnp.asarray(rng.choice([-1, 1], (7, k)).astype(np.int8))
+    pa, pb = pack_signs(a), pack_signs(b)
+    d = np.asarray(hamming_packed(pa, pb))
+    want = (np.asarray(a) != np.asarray(b)).sum(axis=1)
+    assert (d == want).all()
+    # distance to self = 0; to flipped self = k
+    assert (np.asarray(hamming_packed(pa, pa)) == 0).all()
+    assert (np.asarray(hamming_packed(pa, flip_packed(pa, k))) == k).all()
+
+
+def test_np_oracle_agrees(rng):
+    a = rng.integers(0, 2**32, (10, 3), dtype=np.uint32)
+    b = rng.integers(0, 2**32, (10, 3), dtype=np.uint32)
+    got = np.asarray(hamming_packed(jnp.asarray(a), jnp.asarray(b)))
+    assert (got == np_hamming_packed(a, b)).all()

@@ -1,0 +1,91 @@
+"""Paper §3: randomized hash families — collision laws and structure."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory
+from repro.core.functions import AHHash, BHHash, EHHash
+
+D = 48
+
+
+def _pair_at_angle(key, theta, d=D):
+    k1, k2 = jax.random.split(key)
+    w = jax.random.normal(k1, (d,))
+    w = w / jnp.linalg.norm(w)
+    r = jax.random.normal(k2, (d,))
+    r = r - (r @ w) * w
+    r = r / jnp.linalg.norm(r)
+    return w, jnp.cos(theta) * w + jnp.sin(theta) * r
+
+
+@pytest.mark.parametrize("theta", [np.pi / 2, np.pi / 3, np.pi / 2.4])
+def test_bh_collision_law(theta):
+    """Lemma 1: Pr[h(P_w) = h(x)] = 1/2 - 2 alpha^2 / pi^2."""
+    alpha = abs(theta - np.pi / 2)
+    w, x = _pair_at_angle(jax.random.PRNGKey(0), theta)
+    fam = BHHash.create(jax.random.PRNGKey(1), D, 20000)
+    emp = float((fam.signs_query(w[None]) == fam.signs_database(x[None])).mean())
+    assert abs(emp - theory.p_bh(alpha)) < 0.02
+
+
+@pytest.mark.parametrize("theta", [np.pi / 2, np.pi / 3])
+def test_ah_collision_law(theta):
+    alpha = abs(theta - np.pi / 2)
+    w, x = _pair_at_angle(jax.random.PRNGKey(2), theta)
+    fam = AHHash.create(jax.random.PRNGKey(3), D, 40000)
+    sq = np.asarray(fam.signs_query(w[None]))[0]
+    sx = np.asarray(fam.signs_database(x[None]))[0]
+    both = ((sq[0::2] == sx[0::2]) & (sq[1::2] == sx[1::2])).mean()
+    assert abs(both - theory.p_ah(alpha)) < 0.02
+
+
+@pytest.mark.parametrize("theta", [np.pi / 2, np.pi / 3])
+def test_eh_collision_law(theta):
+    alpha = abs(theta - np.pi / 2)
+    w, x = _pair_at_angle(jax.random.PRNGKey(4), theta)
+    fam = EHHash.create(jax.random.PRNGKey(5), D, 4000)
+    emp = float((fam.signs_query(w[None]) == fam.signs_database(x[None])).mean())
+    assert abs(emp - theory.p_eh(alpha)) < 0.03
+
+
+def test_bh_collision_is_twice_ah():
+    """The paper's headline: at alpha=0 BH collides with prob 1/2 = 2x AH."""
+    assert theory.p_bh(0.0) == pytest.approx(2 * theory.p_ah(0.0))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.floats(0.1, 50.0, allow_nan=False))
+def test_scale_invariance(seed, beta):
+    """h(beta z) = h(z) for beta != 0 (paper requirement 1 on eq. 6)."""
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(4, D)).astype(np.float32))
+    fam = BHHash.create(jax.random.PRNGKey(seed % 97), D, 32)
+    assert (fam.signs_database(z) == fam.signs_database(beta * z)).all()
+
+
+def test_query_is_sign_flip():
+    """h(P_w) = -h(w) for BH/EH (eq. 7 convention)."""
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(3, D)).astype(np.float32))
+    bh = BHHash.create(jax.random.PRNGKey(0), D, 16)
+    assert (bh.signs_query(w) == -bh.signs_database(w)).all()
+    eh = EHHash.create(jax.random.PRNGKey(1), D, 8)
+    assert (eh.signs_query(w) == -eh.signs_database(w)).all()
+
+
+def test_bh_is_xnor_of_ah_bits():
+    """Paper §3.3: BH performs XNOR over the two AH database bits."""
+    rng = np.random.default_rng(2)
+    z = jnp.asarray(rng.normal(size=(10, D)).astype(np.float32))
+    key = jax.random.PRNGKey(7)
+    bh = BHHash.create(key, D, 8)
+    ah = AHHash(bh.u, bh.v)   # same projections
+    sa = np.asarray(ah.signs_database(z))
+    sb = np.asarray(bh.signs_database(z))
+    xnor = sa[:, 0::2] * sa[:, 1::2]
+    # sgn(uz)*sgn(vz) = sgn(uz*vz) everywhere except measure-zero ties
+    assert (xnor == sb).mean() > 0.99

@@ -1,0 +1,86 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.learning import surrogate_cost
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n,d,k", [
+    (100, 75, 20), (256, 512, 128), (33, 384, 16), (513, 100, 33),
+    (16, 2000, 64), (1, 7, 1),
+])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_bilinear_hash_vs_ref(rng, n, d, k, dtype):
+    x = rng.normal(size=(n, d)).astype(dtype)
+    u = rng.normal(size=(d, k)).astype(dtype)
+    v = rng.normal(size=(d, k)).astype(dtype)
+    got = np.asarray(ops.bilinear_hash(jnp.asarray(x), jnp.asarray(u),
+                                       jnp.asarray(v)))
+    want = np.asarray(ref.bilinear_hash_ref(
+        jnp.asarray(x, jnp.float32), jnp.asarray(u, jnp.float32),
+        jnp.asarray(v, jnp.float32)))
+    # f32 accumulation order may flip bits sitting exactly at the sign
+    # boundary; allow a vanishing fraction
+    diff_bits = np.unpackbits(np.bitwise_xor(got, want).view(np.uint8)).sum()
+    assert diff_bits <= max(1, (n * k) // 5000), f"{diff_bits} bit diffs"
+
+
+@pytest.mark.parametrize("n,w", [(1000, 1), (4096, 4), (100, 2), (1, 1),
+                                 (2049, 7)])
+def test_hamming_vs_ref(rng, n, w):
+    codes = rng.integers(0, 2**32, (n, w), dtype=np.uint32)
+    q = rng.integers(0, 2**32, (w,), dtype=np.uint32)
+    got = np.asarray(ops.hamming_distances(jnp.asarray(codes), jnp.asarray(q)))
+    want = np.asarray(ref.hamming_distance_ref(jnp.asarray(codes),
+                                               jnp.asarray(q)))
+    assert (got == want).all()
+
+
+def test_hamming_topk_order(rng):
+    codes = rng.integers(0, 2**32, (500, 2), dtype=np.uint32)
+    q = codes[123]   # exact match present
+    d, idx = ops.hamming_topk(jnp.asarray(codes), jnp.asarray(q), 5)
+    assert int(d[0]) == 0 and int(idx[0]) == 123
+    assert (np.diff(np.asarray(d)) >= 0).all()
+
+
+@pytest.mark.parametrize("m,d", [(200, 64), (513, 100), (128, 512), (7, 3)])
+def test_lbh_chain_and_grad(rng, m, d):
+    x = rng.normal(size=(m, d)).astype(np.float32)
+    u = rng.normal(size=(d,)).astype(np.float32)
+    v = rng.normal(size=(d,)).astype(np.float32)
+    r = rng.normal(size=(m, m)).astype(np.float32)
+    r = (r + r.T) / 2
+    sq, sp = ops.lbh_chain(jnp.asarray(x @ u), jnp.asarray(x @ v),
+                           jnp.asarray(r))
+    sqr, spr = ref.lbh_chain_ref(jnp.asarray(x @ u), jnp.asarray(x @ v),
+                                 jnp.asarray(r))
+    np.testing.assert_allclose(np.asarray(sq), np.asarray(sqr),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(spr),
+                               rtol=2e-4, atol=2e-4)
+
+    gu, gv = ops.lbh_grad(jnp.asarray(x), jnp.asarray(u), jnp.asarray(v),
+                          jnp.asarray(r))
+    # cross-check against autodiff of the actual training objective
+    uv = jnp.concatenate([jnp.asarray(u), jnp.asarray(v)])
+    g_auto = jax.grad(surrogate_cost)(uv, jnp.asarray(x), jnp.asarray(r))
+    np.testing.assert_allclose(np.asarray(gu), np.asarray(g_auto[:d]),
+                               rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(g_auto[d:]),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_kernel_block_shape_independence(rng):
+    """Results must not depend on the BlockSpec tiling."""
+    x = rng.normal(size=(300, 200)).astype(np.float32)
+    u = rng.normal(size=(200, 40)).astype(np.float32)
+    v = rng.normal(size=(200, 40)).astype(np.float32)
+    a = ops.bilinear_hash(jnp.asarray(x), jnp.asarray(u), jnp.asarray(v),
+                          block_n=128, block_d=128, block_k=128)
+    b = ops.bilinear_hash(jnp.asarray(x), jnp.asarray(u), jnp.asarray(v),
+                          block_n=512, block_d=512, block_k=256)
+    assert np.array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,62 @@
+"""LBH learning (paper §4): S-matrix semantics, optimization progress,
+and that learned codes fit the target Gram better than random BH codes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.functions import BHHash
+from repro.core.learning import (auto_thresholds, learn_lbh,
+                                 similarity_matrix)
+
+
+def _clustered(rng, n=240, d=32, c=4):
+    centers = rng.normal(size=(c, d)).astype(np.float32)
+    x = centers[rng.integers(0, c, n)] + 0.15 * rng.normal(size=(n, d))
+    return x.astype(np.float32)
+
+
+def test_similarity_matrix_thresholds(rng):
+    x = jnp.asarray(_clustered(rng))
+    s = np.asarray(similarity_matrix(x, t1=0.9, t2=0.2))
+    assert s.shape == (240, 240)
+    assert (np.diag(s) == 1).all()               # |cos|=1 with itself
+    assert s.min() >= -1 and s.max() <= 1
+    # symmetric
+    assert np.allclose(s, s.T)
+
+
+def test_auto_thresholds_ordering(rng):
+    x = jnp.asarray(_clustered(rng))
+    t1, t2 = auto_thresholds(x, x)
+    assert 0.0 < t2 < t1 < 1.0 + 1e-6
+
+
+def test_learning_improves_gram_fit(rng):
+    """||BB^T/k - S||_F must beat the random-projection (BH) codes the
+    optimization was warm-started from — the paper's core claim that
+    learning helps."""
+    x = jnp.asarray(_clustered(rng))
+    k = 12
+    key = jax.random.PRNGKey(3)
+    res = learn_lbh(key, x, k, steps=80)
+    s = similarity_matrix(x, res.t1, res.t2)
+
+    def gram_err(fam):
+        b = fam.signs_database(x).astype(jnp.float32)
+        return float(jnp.linalg.norm(b @ b.T / k - s))
+
+    bh = BHHash.create(key, x.shape[1], k)       # same warm-start key
+    assert gram_err(res.family) < gram_err(bh)
+
+
+def test_bit_costs_decrease(rng):
+    x = jnp.asarray(_clustered(rng, n=150))
+    res = learn_lbh(jax.random.PRNGKey(0), x, 6, steps=60)
+    costs = np.asarray(res.bit_costs)
+    # the returned (u_j, v_j) is the BEST iterate, whose cost is the
+    # trajectory minimum — it must improve on the first step for most bits
+    # (g~ is nonconvex; Nesterov may end on an upswing, which is why the
+    # learner tracks the best iterate rather than the last).
+    best = costs.min(axis=1)
+    assert (best <= costs[:, 0] + 1e-3).all()
+    assert (best < costs[:, 0] - 1e-3).mean() >= 0.5

@@ -1,0 +1,88 @@
+"""Optimizer (incl. quantized moments), checkpoint manager, trainer FT."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.optim.adamw import (AdamWConfig, apply_updates, dequantize_blockwise,
+                               init_opt_state, quantize_blockwise, schedule)
+from repro.train.trainer import StragglerMonitor
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from([(256,), (3, 512), (5,), (7, 100), (2, 3, 1024)]))
+def test_quantize_roundtrip_error(seed, shape):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32)) * 10
+    q, s = quantize_blockwise(x)
+    assert q.shape == x.shape and q.dtype == jnp.int8
+    back = dequantize_blockwise(q, s)
+    err = np.abs(np.asarray(back - x))
+    block_max = np.abs(np.asarray(x)).max()
+    assert err.max() <= block_max / 127 + 1e-6
+
+
+@pytest.mark.parametrize("moment_dtype", ["float32", "bfloat16", "int8"])
+def test_adamw_converges(moment_dtype):
+    """Minimize ||x - target||^2 — all moment dtypes must converge."""
+    target = jnp.asarray(np.linspace(-2, 2, 512).astype(np.float32))
+    params = {"x": jnp.zeros(512)}
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=5,
+                      total_steps=200, moment_dtype=moment_dtype)
+    state = init_opt_state(params, cfg)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(lambda q: jnp.sum((q["x"] - target) ** 2))(p)
+        return apply_updates(p, g, s, cfg)
+
+    for _ in range(150):
+        params, state, metrics = step(params, state)
+    assert float(jnp.abs(params["x"] - target).mean()) < 0.05
+
+
+def test_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    assert float(schedule(cfg, 0)) == 0.0
+    assert float(schedule(cfg, 10)) == pytest.approx(1.0, rel=1e-3)
+    assert float(schedule(cfg, 100)) == pytest.approx(0.1, rel=1e-2)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10.0), "b": [jnp.ones((2, 3)),
+                                         jnp.zeros(4, jnp.int32)]}
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    mgr.save(5, tree, blocking=True)
+    assert mgr.latest_step() == 5
+    like = jax.tree.map(jnp.zeros_like, tree)
+    out = mgr.restore(5, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_retention_and_atomicity(tmp_path):
+    tree = {"x": jnp.ones(3)}
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree, blocking=True)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == ["step_3", "step_4"]
+    # a stale tmp dir is cleaned on startup
+    os.makedirs(tmp_path / ".tmp_step_9_123")
+    CheckpointManager(str(tmp_path), keep=2)
+    assert not (tmp_path / ".tmp_step_9_123").exists()
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(z=3.0, ema=0.9)
+    for _ in range(50):
+        mon.observe(0.10 + np.random.default_rng(0).normal() * 0.0)
+    assert not mon.observe(0.101)
+    assert mon.observe(1.0)          # 10x step time => flagged
+    assert mon.flagged == 1

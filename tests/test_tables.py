@@ -1,0 +1,54 @@
+"""Single-table multi-probe lookup == brute-force Hamming ball."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tables import SingleHashTable, hamming_ball_keys
+from repro.utils.bits import np_hamming_packed
+
+
+def _pack(bits_int, k):
+    words = [(bits_int >> (32 * i)) & 0xFFFFFFFF for i in range((k + 31) // 32)]
+    return np.array(words, dtype=np.uint32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 22), st.integers(0, 3), st.integers(0, 2**31 - 1))
+def test_lookup_equals_bruteforce(k, radius, seed):
+    rng = np.random.default_rng(seed)
+    n = 300
+    codes_int = rng.integers(0, 2**k, n, dtype=np.uint64)
+    packed = np.stack([_pack(int(c), k) for c in codes_int])
+    table = SingleHashTable(packed, k)
+    q_int = int(rng.integers(0, 2**k))
+    q = _pack(q_int, k)
+    got = np.sort(table.lookup(q, radius))
+    dist = np_hamming_packed(packed, q[None, :])
+    want = np.sort(np.flatnonzero(dist <= radius))
+    assert np.array_equal(got, want)
+
+
+def test_ring_order():
+    """Candidates arrive nearest-ring first."""
+    k = 8
+    codes = np.array([[0b0], [0b1], [0b11]], dtype=np.uint32)
+    table = SingleHashTable(codes, k)
+    got = table.lookup(np.array([0], np.uint32), radius=2)
+    assert list(got) == [0, 1, 2]   # d=0, d=1, d=2
+
+
+def test_ball_size():
+    from math import comb
+    k, r = 16, 3
+    keys = list(hamming_ball_keys(0, k, r))
+    assert len(keys) == sum(comb(k, i) for i in range(r + 1))
+    assert len(set(keys)) == len(keys)
+
+
+def test_stats():
+    rng = np.random.default_rng(0)
+    packed = rng.integers(0, 2**16, (1000, 1)).astype(np.uint32)
+    t = SingleHashTable(packed, 16)
+    s = t.stats()
+    assert s["n"] == 1000 and s["buckets"] == t.num_buckets
+    assert sum(len(v) for v in t.buckets.values()) == 1000

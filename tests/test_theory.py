@@ -1,0 +1,40 @@
+"""Closed-form theory (Fig. 2 quantities)."""
+import numpy as np
+import pytest
+
+from repro.core import theory
+
+
+def test_p1_orderings():
+    """Fig. 2(a): BH collision prob is the highest at every r, = 2x AH."""
+    r = np.linspace(0.0, (np.pi / 2) ** 2 * 0.9, 50)
+    alpha = np.sqrt(r)
+    p_ah, p_eh, p_bh = (theory.p_ah(alpha), theory.p_eh(alpha),
+                        theory.p_bh(alpha))
+    assert (p_bh >= p_eh - 1e-12).all()
+    assert (p_eh >= p_ah - 1e-12).all()
+    np.testing.assert_allclose(p_bh, 2 * p_ah, rtol=1e-12)
+
+
+def test_collision_monotone_decreasing():
+    alpha = np.linspace(0, np.pi / 2, 100)
+    for f in (theory.p_ah, theory.p_eh, theory.p_bh):
+        p = f(alpha)
+        assert (np.diff(p) <= 1e-12).all()
+
+
+def test_rho_in_unit_interval_and_fig2b_ordering():
+    """Fig. 2(b) at eps=3: rho_EH <= rho_BH <= rho_AH over small r."""
+    r = np.linspace(0.01, 0.4, 20)
+    rho_ah = theory.rho("ah", r, eps=3.0)
+    rho_eh = theory.rho("eh", r, eps=3.0)
+    rho_bh = theory.rho("bh", r, eps=3.0)
+    for rho in (rho_ah, rho_eh, rho_bh):
+        assert ((rho > 0) & (rho < 1)).all()
+    assert (rho_bh <= rho_ah + 1e-9).all()
+    assert (rho_eh <= rho_bh + 1e-9).all()
+
+
+def test_query_cost_model():
+    tables, k = theory.query_cost_model(10**6, "bh", 0.1, eps=3.0)
+    assert tables >= 1 and k > 0
