@@ -7,10 +7,25 @@ import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def _section(title):
     print(f"\n### {title}")
+
+
+def smoke() -> None:
+    """Fast CI path: import every benchmark module (catches bit-rot) and run
+    a miniature serving sweep end to end."""
+    from benchmarks import (fig2_collision, fig34_active_learning,  # noqa: F401
+                            roofline_table, tables_efficiency)
+
+    _section("smoke — serving sweep (tiny)")
+    t0 = time.perf_counter()
+    rows = tables_efficiency.run_serving(n=2000, d=32, batch=8,
+                                         tables_sweep=(1, 2), repeat=1)
+    print(f"# smoke ok: {len(rows)} metrics in "
+          f"{time.perf_counter() - t0:.1f}s")
 
 
 def main() -> None:
@@ -45,6 +60,12 @@ def main() -> None:
     summary.append(("tables_efficiency", (time.perf_counter() - t0) * 1e6,
                     "per-method timings"))
 
+    _section("Serving — QPS/latency/recall vs tables L")
+    t0 = time.perf_counter()
+    tables_efficiency.run_serving()
+    summary.append(("serving_sweep", (time.perf_counter() - t0) * 1e6,
+                    "qps/latency/recall per L + batch speedup"))
+
     _section("Roofline table (from dry-run artifacts)")
     t0 = time.perf_counter()
     roofline_table.run()
@@ -58,4 +79,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        main()

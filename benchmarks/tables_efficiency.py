@@ -12,6 +12,7 @@ import numpy as np
 from repro.core.indexer import HyperplaneIndex, IndexConfig
 from repro.data.synthetic import tiny1m_like
 from repro.kernels import ops, ref
+from repro.serving import HashQueryService, MultiTableIndex
 
 
 def _t(fn, *args, repeat=3):
@@ -84,6 +85,67 @@ def run_kernels(n=100_000, d=384, k=32):
     return rows
 
 
+def run_serving(n=20000, d=96, batch=32, tables_sweep=(1, 2, 4, 8),
+                bits=18, radius=3, repeat=5, recall_top=20):
+    """QPS / latency / recall vs number of tables L, plus the batched-vs-
+    sequential acceptance comparison: one `query_batch` of `batch` queries
+    against `batch` sequential single-table `HyperplaneIndex.query` calls."""
+    corpus = tiny1m_like(n_labeled=n, n_unlabeled=0, d=d, classes=10)
+    x = corpus.x
+    rng = np.random.default_rng(0)
+    ws = rng.normal(size=(batch, x.shape[1])).astype(np.float32)
+    margins_all = np.abs(x @ ws.T) / np.linalg.norm(ws, axis=1)
+
+    # sequential baseline: the seed-era path, one table, one query at a time
+    cfg1 = IndexConfig(method="bh", bits=bits, radius=radius)
+    hi = HyperplaneIndex(cfg1).fit(x, learn_key=None)
+    for w in ws:                                   # warm the jit caches
+        hi.query(w)
+    t0 = time.perf_counter()
+    for w in ws:
+        hi.query(w)
+    seq_s = time.perf_counter() - t0
+
+    rows = []
+    batch1_s = None
+    print("tables,fit_s,batch_ms,seq_ms,qps,recall@%d,nonempty_frac,"
+          "cache_qps" % recall_top)
+    for L in tables_sweep:
+        cfg = IndexConfig(method="bh", bits=bits, radius=radius, tables=L,
+                          batch=batch)
+        mt = MultiTableIndex(cfg).fit(x)
+        svc = HashQueryService(mt)
+        svc.query_batch(ws)                        # warm
+        t0 = time.perf_counter()
+        for _ in range(repeat):
+            res = mt.query_batch(ws)
+        batch_s = (time.perf_counter() - t0) / repeat
+        hits = sum(1 for b in range(batch)
+                   if res.nonempty[b]
+                   and (margins_all[:, b] < res.margins[b] - 1e-12).sum()
+                   < recall_top)
+        t0 = time.perf_counter()
+        svc.query_batch(ws)                        # all query codes cached
+        cache_s = time.perf_counter() - t0
+        print(f"{L},{mt.fit_s:.2f},{1e3*batch_s:.2f},{1e3*seq_s:.2f},"
+              f"{batch/batch_s:.0f},{hits/batch:.2f},"
+              f"{res.nonempty.mean():.2f},{batch/cache_s:.0f}")
+        rows.append((f"serving_L{L}_batch_ms", 1e3 * batch_s))
+        rows.append((f"serving_L{L}_qps", batch / batch_s))
+        if L == 1:
+            batch1_s = batch_s
+    # like-for-like acceptance check: one L=1 batch vs the same number of
+    # sequential single-table queries (only meaningful when L=1 was swept)
+    if batch1_s is not None:
+        speedup = seq_s / batch1_s
+        print(f"# batched {batch}-query batch vs {batch} sequential queries "
+              f"(both single-table): {speedup:.1f}x "
+              f"{'FASTER' if speedup > 1 else 'SLOWER'}")
+        rows.append(("serving_batch_speedup", speedup))
+    return rows
+
+
 if __name__ == "__main__":
     run()
     run_kernels()
+    run_serving()

@@ -25,6 +25,13 @@ class IndexConfig:
     seed: int = 0
     rerank: bool = True            # exact-margin re-rank of candidates
     max_candidates: int = 4096
+    # escalate the probe radius until at least this many candidates are in
+    # hand (None = fixed radius, the seed behaviour); restores re-rank
+    # quality when the radius-`radius` ball around the query key is sparse
+    min_candidates: int | None = 64
+    # serving knobs (serving.MultiTableIndex / HashQueryService)
+    tables: int = 1                # number of independent hash tables L
+    batch: int = 32                # micro-batch size for the query service
     # LBH learning
     lbh_sample: int = 1000
     lbh_steps: int = 150
@@ -100,7 +107,8 @@ class HyperplaneIndex:
         w = jnp.asarray(w, jnp.float32)
         t0 = time.perf_counter()
         qcode = np.asarray(self.family.hash_query(w[None, :]))[0]
-        cand = self.table.lookup(qcode, cfg.radius, cfg.max_candidates)
+        cand = self.table.lookup(qcode, cfg.radius, cfg.max_candidates,
+                                 cfg.min_candidates)
         t1 = time.perf_counter()
         if cand.size == 0:
             return QueryResult(-1, float("inf"), cand, False, t1 - t0, 0.0)

@@ -20,6 +20,17 @@ from jax.sharding import PartitionSpec as P
 from repro.utils.bits import hamming_packed
 
 
+def shard_map_compat(fn, mesh, in_specs, out_specs):
+    """jax.shard_map (>= 0.5, `check_vma`) or the jax 0.4.x
+    jax.experimental.shard_map.shard_map (`check_rep`)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 @partial(jax.jit, static_argnames=("l",))
 def hamming_topk(codes, query, l: int):
     """Single-device scan: smallest-distance top-l.
@@ -27,6 +38,18 @@ def hamming_topk(codes, query, l: int):
     codes: (n, W) uint32; query: (W,) uint32 -> (dists (l,), idx (l,)).
     """
     d = hamming_packed(codes, query[None, :])
+    neg, idx = jax.lax.top_k(-d, l)
+    return -neg, idx
+
+
+@partial(jax.jit, static_argnames=("l",))
+def hamming_topk_batch(codes, queries, l: int):
+    """Batched scan: top-l per query in one pass.
+
+    codes: (n, W) uint32; queries: (B, W) uint32
+    -> (dists (B, l), idx (B, l)).
+    """
+    d = hamming_packed(codes[None, :, :], queries[:, None, :])   # (B, n)
     neg, idx = jax.lax.top_k(-d, l)
     return -neg, idx
 
@@ -49,12 +72,11 @@ def hamming_topk_sharded(codes, query, l: int, mesh, axis: str = "data"):
     codes must be shardable by `axis` on dim 0.  Returns replicated
     (dists, idx) — idx are global row ids.
     """
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         partial(_local_then_merge, l=l, axis=axis),
         mesh=mesh,
         in_specs=(P(axis, None), P()),
         out_specs=(P(), P()),
-        check_vma=False,
     )
     return fn(codes, query)
 
@@ -70,3 +92,25 @@ def margin_rerank(x, w, candidates, l: int):
     m = jnp.abs(cx @ w) / jnp.maximum(jnp.linalg.norm(w), 1e-12)
     neg, sel = jax.lax.top_k(-m, min(l, candidates.shape[0]))
     return -neg, candidates[sel]
+
+
+@partial(jax.jit, static_argnames=("l",))
+def margin_rerank_batch(x, w_batch, candidates, valid, l: int):
+    """Batched exact re-rank: one gather + one batched matmul for B queries.
+
+    x: (n, d) database; w_batch: (B, d) hyperplane normals;
+    candidates: (B, C) int ids padded to a common length C;
+    valid: (B, C) bool mask for the padding (False rows rank last).
+    Returns (margins (B, l), ids (B, l)) sorted ascending by margin;
+    padded-out slots come back with margin +inf and their padded id.
+    """
+    cx = x[candidates]                         # (B, C, d) gather
+    # multiply+reduce instead of einsum: the d-reduction order is then
+    # independent of B and C, so batched answers are bit-identical to the
+    # same queries issued one at a time (candidate lists are short — the
+    # VPU path costs nothing over the MXU here).
+    m = jnp.abs(jnp.sum(cx * w_batch[:, None, :], axis=-1))
+    m = m / jnp.maximum(jnp.linalg.norm(w_batch, axis=1, keepdims=True), 1e-12)
+    m = jnp.where(valid, m, jnp.inf)
+    neg, sel = jax.lax.top_k(-m, min(l, candidates.shape[1]))
+    return -neg, jnp.take_along_axis(candidates, sel, axis=1)

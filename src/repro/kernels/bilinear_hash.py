@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 WORD = 32
 
 
@@ -74,7 +76,7 @@ def bilinear_hash_kernel(x, u, v, *, block_n: int = 256, block_k: int = 128,
             pltpu.VMEM((block_n, block_k), jnp.float32),
             pltpu.VMEM((block_n, block_k), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, u, v)

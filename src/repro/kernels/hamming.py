@@ -16,7 +16,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams
 
 
 def _popcount_u32(x):
@@ -47,8 +48,45 @@ def hamming_distance_kernel(codes, query, *, block_n: int = 2048,
         ],
         out_specs=pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(codes, query[None, :])
     return out[:, 0]
+
+
+def _batch_kernel(codes_ref, queries_ref, out_ref, *, n_words: int):
+    # codes: (BN, W); queries: (B, W) resident whole (B*W words is tiny).
+    # Word-by-word XOR keeps everything on 2-D (BN, B) lanes — the natural
+    # VPU layout — instead of materializing a 3-D (BN, B, W) intermediate.
+    codes = codes_ref[...]
+    queries = queries_ref[...]
+    acc = jnp.zeros((codes.shape[0], queries.shape[0]), jnp.int32)
+    for w in range(n_words):
+        x = jnp.bitwise_xor(codes[:, w][:, None], queries[:, w][None, :])
+        acc += _popcount_u32(x)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def hamming_distance_batch_kernel(codes, queries, *, block_n: int = 2048,
+                                  interpret: bool = False):
+    """Batched scan: codes (n, W) with n % block_n == 0; queries (B, W).
+    Returns (n, B) int32 distances — the code table streams from HBM once
+    for the whole batch instead of once per query."""
+    n, w = codes.shape
+    b = queries.shape[0]
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        functools.partial(_batch_kernel, n_words=w),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+            pl.BlockSpec((b, w), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b), jnp.int32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(codes, queries)

@@ -19,7 +19,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams
 
 
 def _kernel(p_ref, q_ref, r_ref, sq_ref, sp_ref):
@@ -61,7 +62,7 @@ def lbh_chain_kernel(p, q, r, *, block_m: int = 512, interpret: bool = False):
             jax.ShapeDtypeStruct((1, m), jnp.float32),
             jax.ShapeDtypeStruct((1, m), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(p[None, :], q[None, :], r)

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.bilinear_hash import bilinear_hash_kernel
-from repro.kernels.hamming import hamming_distance_kernel
+from repro.kernels.hamming import (hamming_distance_batch_kernel,
+                                   hamming_distance_kernel)
 from repro.kernels.lbh_grad import lbh_chain_kernel
 from repro.utils.bits import n_words
 
@@ -80,6 +81,30 @@ def hamming_topk(codes, query, l: int, *, block_n: int = 2048,
                  interpret: bool | None = None):
     """Smallest-l Hamming matches: (dists (l,), idx (l,))."""
     d = hamming_distances(codes, query, block_n=block_n, interpret=interpret)
+    neg, idx = jax.lax.top_k(-d, l)
+    return -neg, idx
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def hamming_distances_batch(codes, queries, *, block_n: int = 2048,
+                            interpret: bool | None = None):
+    """(B, n) int32 distances between one code table and B packed queries."""
+    n = codes.shape[0]
+    bn = min(block_n, max(256, n))
+    padded = _pad_to(codes, 0, bn)
+    # sublane-align the query batch; extra rows are scanned then dropped.
+    q = _pad_to(queries, 0, 8)
+    d = hamming_distance_batch_kernel(padded, q, block_n=bn,
+                                      interpret=_interpret_default(interpret))
+    return d[:n, :queries.shape[0]].T
+
+
+@functools.partial(jax.jit, static_argnames=("l", "block_n", "interpret"))
+def hamming_topk_batch(codes, queries, l: int, *, block_n: int = 2048,
+                       interpret: bool | None = None):
+    """Batched smallest-l matches: (dists (B, l), idx (B, l))."""
+    d = hamming_distances_batch(codes, queries, block_n=block_n,
+                                interpret=interpret)
     neg, idx = jax.lax.top_k(-d, l)
     return -neg, idx
 

@@ -1,0 +1,14 @@
+"""Version-tolerant aliases for Pallas TPU symbols that moved across jax
+releases.
+
+jax <= 0.4.x exposes ``pltpu.TPUCompilerParams``; jax >= 0.5 renames it to
+``pltpu.CompilerParams``.  Every kernel imports the alias from here so the
+rest of the package stays release-agnostic.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None)
+if CompilerParams is None:  # jax 0.4.x
+    CompilerParams = pltpu.TPUCompilerParams

@@ -136,6 +136,8 @@ def analyze_compiled(compiled, n_devices: int, pod_size: int) -> dict:
     """
     from repro.launch.hlo_stats import analyze_hlo
     ca = compiled.cost_analysis()
+    if isinstance(ca, list):        # jax 0.4.x returns [dict], >= 0.5 a dict
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     hs = analyze_hlo(txt, n_devices, pod_size)
     flops = hs["flops"]

@@ -116,8 +116,14 @@ def _parse_computations(text: str):
 
 
 def _operands(rest: str):
-    """Names inside the top-level call parens."""
-    out, depth, i, start = [], 0, 0, 0
+    """Operand names inside the top-level call parens.
+
+    Handles both textual operand styles: bare names (`%fusion.1`) and
+    shape-qualified names (`f32[128,128]{1,0} %fusion.1`, the jax 0.4.x
+    dump format) — the name is the last token of each operand.
+    """
+    depth = 0
+    seg = None
     # rest starts right after '('
     for i, ch in enumerate(rest):
         if ch == "(":
@@ -127,10 +133,21 @@ def _operands(rest: str):
                 seg = rest[:i]
                 break
             depth -= 1
-    else:
+    if seg is None:
         seg = rest
-    for tok in re.findall(r"%?([\w.\-]+)", seg):
-        out.append(tok)
+    out, buf, depth = [], [], 0
+    for ch in seg + ",":
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            toks = re.findall(r"%?([\w.\-]+)", "".join(buf))
+            if toks:
+                out.append(toks[-1])
+            buf = []
+            continue
+        buf.append(ch)
     return out
 
 

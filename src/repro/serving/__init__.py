@@ -1,0 +1,10 @@
+# Serving subsystem: the unit of work is a request *stream*, not a single
+# query.  MultiTableIndex keeps L independent bilinear-hash tables with
+# dynamic insert/delete; batch_query vectorizes hashing, multi-probe key
+# generation and the margin re-rank over whole batches; HashQueryService
+# fronts it all with micro-batching, a query-code LRU cache and QPS/latency
+# counters.
+from repro.serving.batch_query import (batched_rerank, hash_database_all,
+                                       hash_queries_all, pad_candidates)
+from repro.serving.multi_table import BatchQueryResult, MultiTableIndex
+from repro.serving.service import HashQueryService

@@ -1,0 +1,107 @@
+"""Vectorized batched query path for the multi-table index.
+
+Three host/device stages, each batched over B queries x L tables:
+
+1. hashing — all L tables' query codes in one ``vmap``ped bilinear pass
+   (BH/LBH share the stacked (L, d, k) projection layout; AH/EH fall back
+   to a per-table loop since their parameters aren't stackable);
+2. multi-probe key generation — one broadcast XOR of the (B,) query keys
+   against the precomputed ring masks (core.tables.probe_masks);
+3. re-rank — a single gather + batched reduce over the padded candidate
+   matrix (core.search.margin_rerank_batch), bit-identical to issuing the
+   same queries one at a time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.functions import BHHash, bilinear_signs
+from repro.core.search import margin_rerank_batch
+from repro.utils.bits import pack_signs
+
+PAD_MULTIPLE = 128  # candidate-matrix padding quantum (bounds jit retraces)
+
+
+def _stackable(families) -> bool:
+    return (all(isinstance(f, BHHash) for f in families)
+            and len({f.u.shape for f in families}) == 1)
+
+
+@jax.jit
+def _bh_query_codes(u_stack, v_stack, w):
+    """(L, d, k) x2, (B, d) -> (L, B, W) packed query codes (sign-flipped)."""
+    return jax.vmap(lambda u, v: pack_signs(-bilinear_signs(w, u, v)))(
+        u_stack, v_stack)
+
+
+@jax.jit
+def _bh_db_codes(u_stack, v_stack, x):
+    """(L, d, k) x2, (n, d) -> (L, n, W) packed database codes."""
+    return jax.vmap(lambda u, v: pack_signs(bilinear_signs(x, u, v)))(
+        u_stack, v_stack)
+
+
+def hash_queries_all(families, w) -> jax.Array:
+    """Query-side codes for all tables: (L, B, W) uint32."""
+    w = jnp.asarray(w, jnp.float32)
+    if _stackable(families):
+        u = jnp.stack([f.u for f in families])
+        v = jnp.stack([f.v for f in families])
+        return _bh_query_codes(u, v, w)
+    return jnp.stack([f.hash_query(w) for f in families])
+
+
+def hash_database_all(families, x) -> jax.Array:
+    """Database-side codes for all tables: (L, n, W) uint32."""
+    x = jnp.asarray(x, jnp.float32)
+    if _stackable(families):
+        u = jnp.stack([f.u for f in families])
+        v = jnp.stack([f.v for f in families])
+        return _bh_db_codes(u, v, x)
+    return jnp.stack([f.hash_database(x) for f in families])
+
+
+def union_candidates(per_table: list[np.ndarray]) -> np.ndarray:
+    """Union of per-table candidate id lists, first occurrence order."""
+    arrs = [a for a in per_table if a.size]
+    if not arrs:
+        return np.empty((0,), dtype=np.int64)
+    cat = np.concatenate(arrs)
+    _, first = np.unique(cat, return_index=True)
+    return cat[np.sort(first)]
+
+
+def pad_candidates(cands: list[np.ndarray]):
+    """Ragged candidate lists -> (ids (B, C), valid (B, C)) with C padded to
+    PAD_MULTIPLE so the jitted re-rank sees few distinct shapes."""
+    b = len(cands)
+    cmax = max((c.size for c in cands), default=0)
+    c_pad = max(PAD_MULTIPLE, -(-cmax // PAD_MULTIPLE) * PAD_MULTIPLE)
+    ids = np.zeros((b, c_pad), dtype=np.int64)
+    valid = np.zeros((b, c_pad), dtype=bool)
+    for i, c in enumerate(cands):
+        ids[i, :c.size] = c
+        valid[i, :c.size] = True
+    return ids, valid
+
+
+def batched_rerank(x, w, cands: list[np.ndarray], l: int = 1, mask=None):
+    """Exact-margin re-rank of B ragged candidate lists in one device call.
+
+    x: (n, d) device database; w: (B, d) normals; mask: optional (n,) bool —
+    candidates outside it are ignored (e.g. already-labeled points in AL).
+    Returns (ids (B, l) int64, margins (B, l) f32, nonempty (B,) bool); slots
+    without a valid candidate hold id -1 / margin +inf.
+    """
+    ids, valid = pad_candidates(cands)
+    if mask is not None:
+        valid &= np.asarray(mask, bool)[ids]
+    nonempty = valid.any(axis=1)
+    margins, top = margin_rerank_batch(x, jnp.asarray(w, jnp.float32),
+                                       jnp.asarray(ids), jnp.asarray(valid), l)
+    margins = np.asarray(margins)
+    top = np.asarray(top).astype(np.int64)
+    top[~np.isfinite(margins)] = -1
+    return top, margins, nonempty

@@ -1,0 +1,249 @@
+"""L independent bilinear-hash tables with union-of-candidates lookup and
+dynamic insert/delete (standard multi-table LSH layered on the paper's
+compact single-table regime).
+
+Each table t hashes with a family drawn from ``fold_in(PRNGKey(seed), t)``,
+so a MultiTableIndex with L=1 reproduces a single-table index built from
+``fold_in(key, 0)`` exactly, and the candidate set grows monotonically with
+L for a fixed seed — more tables can only add recall.
+
+Ids are stable across mutations: ``insert`` appends rows (never renumbers),
+``delete`` tombstones them out of every table while their feature rows stay
+behind so outstanding candidate ids keep indexing ``x`` correctly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import functions as F
+from repro.core import learning as L
+from repro.core.indexer import IndexConfig, QueryResult
+from repro.core.search import hamming_topk_batch
+from repro.core.tables import SingleHashTable, keys_of
+from repro.serving import batch_query as bq
+
+
+@dataclasses.dataclass
+class BatchQueryResult:
+    ids: np.ndarray          # (B,) argmin-margin candidate per query (or -1)
+    margins: np.ndarray      # (B,) f32
+    nonempty: np.ndarray     # (B,) bool — any candidate survived the lookup?
+    candidates: list[np.ndarray]  # per-query short-lists (union over tables)
+    lookup_s: float
+    rerank_s: float
+    table_hits: np.ndarray   # (L,) candidates contributed per table
+    ids_topk: np.ndarray | None = None      # (B, l) when queried with l > 1
+    margins_topk: np.ndarray | None = None  # (B, l), +inf past the valid set
+
+
+class MultiTableIndex:
+    """Union-of-candidates index over L compact bilinear-hash tables."""
+
+    def __init__(self, config: IndexConfig, tables: int | None = None):
+        self.config = config
+        self.num_tables = int(tables if tables is not None else config.tables)
+        assert self.num_tables >= 1
+        self.families: list = []
+        self.tables: list[SingleHashTable] = []
+        self.codes: list[np.ndarray] = []   # per-table (n, W) uint32, host
+        self.x_np: np.ndarray | None = None  # (n, d) host copy, rows stable
+        self.active: np.ndarray | None = None  # (n,) bool tombstone mask
+        self.version = 0                    # bumped on insert/delete
+        self.fit_s = 0.0
+        self._x_dev = None
+        self._codes_dev: list | None = None   # live rows only
+        self._live_ids: np.ndarray | None = None
+
+    # -- build ---------------------------------------------------------------
+
+    def table_key(self, t: int, learn_key=None):
+        base = (jax.random.PRNGKey(self.config.seed)
+                if learn_key is None else learn_key)
+        return jax.random.fold_in(base, t)
+
+    def _make_family(self, key, x):
+        cfg = self.config
+        d = x.shape[1]
+        if cfg.method == "ah":
+            return F.AHHash.create(key, d, cfg.bits)
+        if cfg.method == "eh":
+            return F.EHHash.create(key, d, cfg.bits,
+                                   sample_dims=cfg.eh_sample_dims)
+        if cfg.method == "bh":
+            return F.BHHash.create(key, d, cfg.bits)
+        if cfg.method == "lbh":
+            m = min(cfg.lbh_sample, x.shape[0])
+            sel = jax.random.choice(jax.random.fold_in(key, 1), x.shape[0],
+                                    (m,), replace=False)
+            res = L.learn_lbh(key, x[sel], cfg.bits, x_all=x,
+                              steps=cfg.lbh_steps, lr=cfg.lbh_lr)
+            return res.family
+        raise ValueError(f"unknown method {self.config.method!r}")
+
+    def fit(self, x, learn_key=None) -> "MultiTableIndex":
+        t0 = time.perf_counter()
+        x = jnp.asarray(x, jnp.float32)
+        self.families = [self._make_family(self.table_key(t, learn_key), x)
+                         for t in range(self.num_tables)]
+        codes_all = np.asarray(bq.hash_database_all(self.families, x))
+        self.codes = [codes_all[t] for t in range(self.num_tables)]
+        self.tables = [SingleHashTable(c, self.config.bits)
+                       for c in self.codes]
+        self.x_np = np.asarray(x)
+        self.active = np.ones(self.x_np.shape[0], dtype=bool)
+        self._x_dev = None
+        self._codes_dev = None
+        self._live_ids = None
+        self.version += 1
+        self.fit_s = time.perf_counter() - t0
+        return self
+
+    @property
+    def n(self) -> int:
+        """Live (non-deleted) row count."""
+        return int(self.active.sum())
+
+    @property
+    def x(self):
+        if self._x_dev is None:
+            self._x_dev = jnp.asarray(self.x_np)
+        return self._x_dev
+
+    # -- dynamic updates -----------------------------------------------------
+
+    def insert(self, x_new) -> np.ndarray:
+        """Append rows to every table; returns the assigned ids."""
+        x_new = np.atleast_2d(np.asarray(x_new, np.float32))
+        if x_new.shape[0] == 0:
+            return np.empty((0,), dtype=np.int64)
+        new_codes = np.asarray(
+            bq.hash_database_all(self.families, jnp.asarray(x_new)))
+        start = self.x_np.shape[0]
+        ids = np.arange(start, start + x_new.shape[0], dtype=np.int64)
+        for t in range(self.num_tables):
+            self.tables[t].insert(new_codes[t], ids)
+            self.codes[t] = np.concatenate([self.codes[t], new_codes[t]])
+        self.x_np = np.concatenate([self.x_np, x_new])
+        self.active = np.concatenate(
+            [self.active, np.ones(x_new.shape[0], dtype=bool)])
+        self._x_dev = None
+        self._codes_dev = None
+        self._live_ids = None
+        self.version += 1
+        return ids
+
+    def delete(self, ids) -> None:
+        """Tombstone rows out of every table (ids stay stable)."""
+        ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+        if not self.active[ids].all():
+            raise KeyError("delete of already-deleted or unknown id")
+        if np.unique(ids).size != ids.size:
+            raise KeyError("duplicate ids in delete")
+        for t in range(self.num_tables):
+            self.tables[t].delete(ids)
+        self.active[ids] = False
+        self._codes_dev = None
+        self._live_ids = None
+        self.version += 1
+
+    # -- lookup / query ------------------------------------------------------
+
+    def lookup_batch(self, w, qcodes: np.ndarray | None = None
+                     ) -> tuple[list[np.ndarray], np.ndarray, float]:
+        """Hash + multi-probe for B hyperplanes at once.
+
+        qcodes: optional precomputed (L, B, W) query codes (the service
+        computes them for its cache keys — no point hashing twice).
+        Returns (per-query unioned candidate lists, per-table hit counts,
+        elapsed seconds)."""
+        cfg = self.config
+        w = np.atleast_2d(np.asarray(w, np.float32))
+        t0 = time.perf_counter()
+        if qcodes is None:
+            qcodes = np.asarray(bq.hash_queries_all(self.families, w))
+        hits = np.zeros(self.num_tables, dtype=np.int64)
+        per_query: list[list[np.ndarray]] = [[] for _ in range(w.shape[0])]
+        for t, table in enumerate(self.tables):
+            keys = keys_of(qcodes[t])
+            found = table.lookup_many(keys, cfg.radius, cfg.max_candidates,
+                                      cfg.min_candidates)
+            for b, cand in enumerate(found):
+                per_query[b].append(cand)
+                hits[t] += cand.size
+        cands = [bq.union_candidates(per) for per in per_query]
+        if cfg.max_candidates is not None:
+            cands = [c[:cfg.max_candidates] for c in cands]
+        return cands, hits, time.perf_counter() - t0
+
+    def query_batch(self, w, mask=None, l: int = 1) -> BatchQueryResult:
+        """Answer B hyperplane queries as one batch.
+
+        mask: optional (n,) bool — restrict answers to these rows (AL uses
+        the unlabeled pool).  Bit-identical to B calls of `query`."""
+        cands, hits, lookup_s = self.lookup_batch(w)
+        w = np.atleast_2d(np.asarray(w, np.float32))
+        t0 = time.perf_counter()
+        ids, margins, nonempty = bq.batched_rerank(self.x, w, cands, l, mask)
+        rerank_s = time.perf_counter() - t0
+        return BatchQueryResult(ids[:, 0], margins[:, 0], nonempty, cands,
+                                lookup_s, rerank_s, hits,
+                                ids_topk=ids if l > 1 else None,
+                                margins_topk=margins if l > 1 else None)
+
+    def query(self, w) -> QueryResult:
+        """Single-query path (same machinery, B=1)."""
+        res = self.query_batch(np.asarray(w, np.float32)[None, :])
+        return QueryResult(int(res.ids[0]), float(res.margins[0]),
+                           res.candidates[0], bool(res.nonempty[0]),
+                           res.lookup_s, res.rerank_s)
+
+    def query_scan_batch(self, w, l: int = 16):
+        """Device-side batched fallback: per-table top-l Hamming scan, union,
+        exact re-rank — no host tables involved, so it shards like
+        core.search.hamming_topk_sharded.
+
+        Tombstoned rows are compacted out of the device code cache before
+        the scan, so deleted rows can never crowd live answers out of the
+        top-l slots."""
+        w = np.atleast_2d(np.asarray(w, np.float32))
+        qcodes = bq.hash_queries_all(self.families, w)        # (L, B, W)
+        if self._codes_dev is None:
+            self._live_ids = np.flatnonzero(self.active)
+            self._codes_dev = [jnp.asarray(c[self._live_ids])
+                               for c in self.codes]
+        n_live = self._live_ids.shape[0]
+        if n_live == 0:
+            b = w.shape[0]
+            return (np.full(b, -1, np.int64), np.full(b, np.inf, np.float32))
+        if self.config.use_kernels:
+            from repro.kernels import ops
+            topk = lambda codes, q: ops.hamming_topk_batch(
+                codes, q, min(l, n_live))
+        else:
+            topk = lambda codes, q: hamming_topk_batch(
+                codes, q, min(l, n_live))
+        per_table = []
+        for t in range(self.num_tables):
+            _, idx = topk(self._codes_dev[t], qcodes[t])
+            per_table.append(self._live_ids[np.asarray(idx, dtype=np.int64)])
+        cands = [bq.union_candidates([per_table[t][b]
+                                      for t in range(self.num_tables)])
+                 for b in range(w.shape[0])]
+        ids, margins, nonempty = bq.batched_rerank(self.x, w, cands, 1)
+        return ids[:, 0], margins[:, 0]
+
+    def stats(self) -> dict:
+        per_table = [t.stats() for t in self.tables]
+        return {
+            "tables": self.num_tables,
+            "n": self.n,
+            "bits": self.config.bits,
+            "version": self.version,
+            "per_table": per_table,
+            "buckets_total": int(sum(s["buckets"] for s in per_table)),
+        }

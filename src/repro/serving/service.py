@@ -1,0 +1,157 @@
+"""Micro-batching query service over a MultiTableIndex.
+
+Mirrors the Engine idiom of serve/engine.py: callers enqueue work
+(``submit``) and the service answers everything pending as a single batched
+device pass (``flush``), or hand it a whole batch at once (``query_batch``)
+and it chunks by ``max_batch``.
+
+The LRU cache sits at the query-*code* level: two hyperplanes that hash to
+the same L codes probe the same buckets, so the cached value is the unioned
+candidate list (host dict-probe work — the serial part of the pipeline).
+The exact-margin re-rank always runs, because margins depend on w itself,
+not just its code.  The cache is dropped whenever the index mutates
+(``index.version``) and bypassed when a row mask is given (mask-dependent
+results must not be shared).
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.core.indexer import QueryResult
+from repro.serving import batch_query as bq
+from repro.serving.multi_table import MultiTableIndex
+
+
+class HashQueryService:
+    """Batched front end with micro-batching, candidate cache and counters."""
+
+    def __init__(self, index: MultiTableIndex, max_batch: int | None = None,
+                 cache_size: int = 1024):
+        self.index = index
+        self.max_batch = int(max_batch if max_batch is not None
+                             else index.config.batch)
+        assert self.max_batch >= 1
+        self.cache_size = int(cache_size)
+        self._cache: OrderedDict[bytes, np.ndarray] = OrderedDict()
+        self._cache_version = index.version
+        self._pending: list[np.ndarray] = []
+        # counters
+        self.requests = 0
+        self.batches = 0
+        self.cache_hits = 0
+        self.busy_s = 0.0
+        self.lookup_s = 0.0
+        self.rerank_s = 0.0
+        self.latencies_s: list[float] = []
+
+    # -- micro-batching ------------------------------------------------------
+
+    def submit(self, w) -> int:
+        """Enqueue one hyperplane query; returns its ticket (flush order)."""
+        self._pending.append(np.asarray(w, np.float32).reshape(-1))
+        return len(self._pending) - 1
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def flush(self) -> list[QueryResult]:
+        """Answer everything pending as one batch, in submit order."""
+        if not self._pending:
+            return []
+        ws = np.stack(self._pending)
+        self._pending = []
+        return self.query_batch(ws)
+
+    def query(self, w) -> QueryResult:
+        ticket = self.submit(w)
+        return self.flush()[ticket]
+
+    # -- batched path --------------------------------------------------------
+
+    def query_batch(self, ws, mask=None) -> list[QueryResult]:
+        """Answer B queries, chunked by ``max_batch``; results in order."""
+        ws = np.atleast_2d(np.asarray(ws, np.float32))
+        out: list[QueryResult] = []
+        for s in range(0, ws.shape[0], self.max_batch):
+            out.extend(self._answer(ws[s:s + self.max_batch], mask))
+        return out
+
+    def _cache_get(self, key: bytes) -> np.ndarray | None:
+        if self._cache_version != self.index.version:
+            self._cache.clear()
+            self._cache_version = self.index.version
+            return None
+        cand = self._cache.get(key)
+        if cand is not None:
+            self._cache.move_to_end(key)
+        return cand
+
+    def _cache_put(self, key: bytes, cand: np.ndarray) -> None:
+        self._cache[key] = cand
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+    def _answer(self, ws: np.ndarray, mask) -> list[QueryResult]:
+        t_start = time.perf_counter()
+        b = ws.shape[0]
+        use_cache = mask is None and self.cache_size > 0
+        qcodes = np.asarray(bq.hash_queries_all(self.index.families, ws))
+        keys = [qcodes[:, i, :].tobytes() for i in range(b)]
+
+        cands: list[np.ndarray | None] = [None] * b
+        miss_rows = []
+        for i, key in enumerate(keys):
+            hit = self._cache_get(key) if use_cache else None
+            if hit is None:
+                miss_rows.append(i)
+            else:
+                cands[i] = hit
+                self.cache_hits += 1
+        lookup_s = 0.0
+        if miss_rows:
+            found, _, lookup_s = self.index.lookup_batch(
+                ws[miss_rows], qcodes=qcodes[:, miss_rows, :])
+            for i, cand in zip(miss_rows, found):
+                cands[i] = cand
+                if use_cache:
+                    self._cache_put(keys[i], cand)
+
+        t0 = time.perf_counter()
+        ids, margins, nonempty = bq.batched_rerank(self.index.x, ws, cands,
+                                                   1, mask)
+        rerank_s = time.perf_counter() - t0
+
+        elapsed = time.perf_counter() - t_start
+        self.requests += b
+        self.batches += 1
+        self.busy_s += elapsed
+        self.lookup_s += lookup_s
+        self.rerank_s += rerank_s
+        self.latencies_s.append(elapsed)
+        return [QueryResult(int(ids[i, 0]), float(margins[i, 0]), cands[i],
+                            bool(nonempty[i]), lookup_s / b, rerank_s / b)
+                for i in range(b)]
+
+    # -- counters ------------------------------------------------------------
+
+    def stats(self) -> dict:
+        lat = np.asarray(self.latencies_s) if self.latencies_s else np.zeros(1)
+        return {
+            "requests": self.requests,
+            "batches": self.batches,
+            "mean_batch": self.requests / max(self.batches, 1),
+            "cache_hits": self.cache_hits,
+            "cache_hit_rate": self.cache_hits / max(self.requests, 1),
+            "cache_entries": len(self._cache),
+            "qps": self.requests / max(self.busy_s, 1e-12),
+            "mean_batch_latency_ms": 1e3 * float(lat.mean()),
+            "p95_batch_latency_ms": 1e3 * float(np.quantile(lat, 0.95)),
+            "lookup_s": self.lookup_s,
+            "rerank_s": self.rerank_s,
+            "index_version": self.index.version,
+        }

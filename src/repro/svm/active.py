@@ -10,7 +10,10 @@ Protocol (faithful to the paper's setup):
 - an empty hash lookup falls back to random selection (paper §5.2).
 
 Selectors: random / exhaustive (the two baselines) and one per hash family
-(AH, EH, BH, LBH) through a HyperplaneIndex built once over the pool.
+(AH, EH, BH, LBH) through a MultiTableIndex built once over the pool and
+fronted by a HashQueryService — the C per-iteration hyperplane queries are
+issued as ONE micro-batch (hashing, multi-probe and re-rank all batched)
+instead of C serial single-query passes.
 """
 from __future__ import annotations
 
@@ -21,8 +24,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.indexer import HyperplaneIndex, IndexConfig
+from repro.core.indexer import IndexConfig
 from repro.data.synthetic import Corpus
+from repro.serving.multi_table import MultiTableIndex
+from repro.serving.service import HashQueryService
 from repro.svm.linear_svm import average_precision, train_ova
 
 
@@ -67,6 +72,11 @@ class RandomSelector:
         pool = np.flatnonzero(unlabeled)
         return int(self.rng.choice(pool)), True
 
+    def select_batch(self, w_all: np.ndarray, unlabeled: np.ndarray):
+        out = [self.select(c, w_all[c], unlabeled)
+               for c in range(w_all.shape[0])]
+        return [i for i, _ in out], [ok for _, ok in out]
+
 
 class ExhaustiveSelector:
     name = "exhaustive"
@@ -86,32 +96,48 @@ class ExhaustiveSelector:
         m = jnp.where(jnp.asarray(unlabeled), m, jnp.inf)
         return int(jnp.argmin(m)), True
 
+    def select_batch(self, w_all: np.ndarray, unlabeled: np.ndarray):
+        picks = self.select_all(jnp.asarray(w_all), unlabeled)
+        return [int(i) for i in picks], [True] * len(picks)
+
 
 class HashSelector:
-    """Min-margin selection through a HyperplaneIndex (one table, built once)."""
+    """Min-margin selection through a MultiTableIndex + HashQueryService.
+
+    All C per-iteration hyperplane queries go through the service as one
+    micro-batch; an empty (post-mask) lookup falls back to random selection
+    exactly as the paper prescribes (§5.2).
+    """
 
     def __init__(self, index_config: IndexConfig, seed: int = 0):
         self.config = index_config
         self.name = index_config.method
         self.rng = np.random.default_rng(seed)
-        self.index: HyperplaneIndex | None = None
+        self.index: MultiTableIndex | None = None
+        self.service: HashQueryService | None = None
 
     def prepare(self, corpus: Corpus):
-        self.index = HyperplaneIndex(self.config).fit(corpus.x)
-        self.x = self.index.x
+        self.index = MultiTableIndex(self.config).fit(corpus.x)
+        self.service = HashQueryService(self.index,
+                                        max_batch=self.config.batch)
         return self
 
     def select(self, c: int, w, unlabeled: np.ndarray):
-        qcode = np.asarray(self.index.family.hash_query(
-            jnp.asarray(w, jnp.float32)[None, :]))[0]
-        cand = self.index.table.lookup(qcode, self.config.radius,
-                                       self.config.max_candidates)
-        cand = cand[unlabeled[cand]] if cand.size else cand
-        if cand.size == 0:
-            pool = np.flatnonzero(unlabeled)
-            return int(self.rng.choice(pool)), False
-        m = jnp.abs(self.x[jnp.asarray(cand)] @ jnp.asarray(w, jnp.float32))
-        return int(cand[int(jnp.argmin(m))]), True
+        picks, oks = self.select_batch(
+            np.asarray(w, np.float32)[None, :], unlabeled)
+        return picks[0], oks[0]
+
+    def select_batch(self, w_all: np.ndarray, unlabeled: np.ndarray):
+        results = self.service.query_batch(w_all, mask=unlabeled)
+        picks, oks = [], []
+        for res in results:
+            if res.nonempty:
+                picks.append(res.index)
+                oks.append(True)
+            else:
+                picks.append(int(self.rng.choice(np.flatnonzero(unlabeled))))
+                oks.append(False)
+        return picks, oks
 
 
 def make_selector(method: str, *, bits: int, radius: int, seed: int = 0,
@@ -183,11 +209,16 @@ def run_active_learning(corpus: Corpus, selector, config: ALConfig) -> ALResult:
         unlabeled = ~labeled
 
         t0 = time.perf_counter()
-        picks = []
-        for c in range(c_num):
-            idx, ok = selector.select(c, w_np[c], unlabeled)
-            picks.append(idx)
-            nonempty[c] += int(ok)
+        if hasattr(selector, "select_batch"):
+            # all C hyperplane queries answered as one micro-batch
+            picks, oks = selector.select_batch(w_np, unlabeled)
+            nonempty += np.asarray(oks, dtype=np.int64)
+        else:
+            picks = []
+            for c in range(c_num):
+                idx, ok = selector.select(c, w_np[c], unlabeled)
+                picks.append(idx)
+                nonempty[c] += int(ok)
         select_s += time.perf_counter() - t0
 
         # metrics: achieved vs optimal margin this round

@@ -1,6 +1,9 @@
 """Bit-packing and popcount invariants (property tests)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.utils.bits import (flip_packed, hamming_packed, n_words,

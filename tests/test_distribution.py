@@ -73,6 +73,7 @@ def test_compressed_psum_error_feedback():
         import jax, jax.numpy as jnp, numpy as np
         from functools import partial
         from jax.sharding import PartitionSpec as P
+        from repro.core.search import shard_map_compat
         from repro.optim.grad_compress import compressed_psum, init_residuals
         mesh = jax.make_mesh((4,), ("dp",))
         g = {"w": jnp.asarray(np.random.default_rng(0)
@@ -80,9 +81,9 @@ def test_compressed_psum_error_feedback():
         r0 = {"w": jnp.zeros((256,), jnp.float32)}
         def f(gs, rs):
             return compressed_psum(gs, rs, "dp")
-        out = jax.jit(jax.shard_map(f, mesh=mesh,
-                                    in_specs=(P("dp"), P()),
-                                    out_specs=P(), check_vma=False))(
+        out = jax.jit(shard_map_compat(f, mesh=mesh,
+                                       in_specs=(P("dp"), P()),
+                                       out_specs=P()))(
             {"w": g["w"]}, r0)
         mean_g, new_r = out
         exact = np.asarray(g["w"]).reshape(4, 256).mean(0)

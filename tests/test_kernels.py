@@ -6,6 +6,7 @@ import pytest
 
 from repro.core.learning import surrogate_cost
 from repro.kernels import ops, ref
+from repro.utils.bits import np_hamming_packed
 
 
 @pytest.mark.parametrize("n,d,k", [
@@ -37,6 +38,31 @@ def test_hamming_vs_ref(rng, n, w):
     want = np.asarray(ref.hamming_distance_ref(jnp.asarray(codes),
                                                jnp.asarray(q)))
     assert (got == want).all()
+
+
+@pytest.mark.parametrize("n,b,w", [(1000, 1, 1), (512, 32, 2), (100, 5, 2),
+                                   (2049, 9, 4)])
+def test_hamming_batch_vs_single(rng, n, b, w):
+    """Batched kernel row b == single-query kernel on query b, exactly."""
+    codes = rng.integers(0, 2**32, (n, w), dtype=np.uint32)
+    qs = rng.integers(0, 2**32, (b, w), dtype=np.uint32)
+    got = np.asarray(ops.hamming_distances_batch(jnp.asarray(codes),
+                                                 jnp.asarray(qs)))
+    assert got.shape == (b, n)
+    for i in range(b):
+        want = np.asarray(ops.hamming_distances(jnp.asarray(codes),
+                                                jnp.asarray(qs[i])))
+        assert (got[i] == want).all()
+    d, idx = ops.hamming_topk_batch(jnp.asarray(codes), jnp.asarray(qs),
+                                    min(8, n))
+    idx = np.asarray(idx)
+    for i in range(b):
+        ds, _ = ops.hamming_topk(jnp.asarray(codes), jnp.asarray(qs[i]),
+                                 min(8, n))
+        assert (np.asarray(d[i]) == np.asarray(ds)).all()
+        # idx must actually point at rows with the reported distances
+        gathered = np_hamming_packed(codes[idx[i]], qs[i][None, :])
+        assert (gathered == np.asarray(d[i])).all()
 
 
 def test_hamming_topk_order(rng):

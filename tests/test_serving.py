@@ -1,0 +1,182 @@
+"""Serving subsystem: multi-table recall, dynamic updates, batched query
+equivalence, and service micro-batching semantics."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.indexer import HyperplaneIndex, IndexConfig
+from repro.data.synthetic import tiny1m_like
+from repro.serving import HashQueryService, MultiTableIndex
+
+BITS, RADIUS = 18, 3
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return tiny1m_like(n_labeled=2000, n_unlabeled=0, d=32, classes=5, seed=0)
+
+
+@pytest.fixture(scope="module")
+def queries(corpus):
+    rng = np.random.default_rng(1)
+    return rng.normal(size=(32, corpus.x.shape[1])).astype(np.float32)
+
+
+def _cfg(**kw):
+    kw.setdefault("method", "bh")
+    kw.setdefault("bits", BITS)
+    kw.setdefault("radius", RADIUS)
+    return IndexConfig(**kw)
+
+
+def _recall(index, queries, x, top=20):
+    """Fraction of queries whose answer lands in the true margin top-`top`."""
+    hit = 0
+    res = index.query_batch(queries)
+    for b in range(queries.shape[0]):
+        m = np.abs(x @ queries[b]) / np.linalg.norm(queries[b])
+        if res.nonempty[b] and (m < res.margins[b] - 1e-12).sum() < top:
+            hit += 1
+    return hit / queries.shape[0]
+
+
+def test_multi_table_recall_at_least_single(corpus, queries):
+    single = MultiTableIndex(_cfg(tables=1)).fit(corpus.x)
+    multi = MultiTableIndex(_cfg(tables=4)).fit(corpus.x)
+    # same seed => table 0 of L=4 is the L=1 table, so candidates only grow
+    res1 = single.query_batch(queries)
+    res4 = multi.query_batch(queries)
+    for b in range(queries.shape[0]):
+        assert set(res1.candidates[b]) <= set(res4.candidates[b])
+        if res1.nonempty[b]:
+            assert res4.margins[b] <= res1.margins[b]
+    assert (_recall(multi, queries, corpus.x)
+            >= _recall(single, queries, corpus.x))
+
+
+def test_single_table_matches_hyperplane_index(corpus, queries):
+    """L=1 multi-table == the core single-table index (same family key)."""
+    key0 = jax.random.fold_in(jax.random.PRNGKey(0), 0)
+    hi = HyperplaneIndex(_cfg()).fit(corpus.x, learn_key=key0)
+    mt = MultiTableIndex(_cfg(tables=1)).fit(corpus.x)
+    assert np.array_equal(np.asarray(hi.codes), mt.codes[0])
+    for b in range(8):
+        r1, r2 = hi.query(queries[b]), mt.query(queries[b])
+        assert np.array_equal(np.sort(r1.candidates), np.sort(r2.candidates))
+        assert r1.index == r2.index
+
+
+def test_insert_delete_roundtrip_equals_rebuild(corpus, queries):
+    cfg = _cfg(tables=4)
+    grown = MultiTableIndex(cfg).fit(corpus.x[:1500])
+    ids = grown.insert(corpus.x[1500:])
+    assert np.array_equal(ids, np.arange(1500, 2000))
+    fresh = MultiTableIndex(cfg).fit(corpus.x)
+    for b in range(queries.shape[0]):
+        ra, rb = grown.query(queries[b]), fresh.query(queries[b])
+        assert np.array_equal(ra.candidates, rb.candidates)
+        assert ra.index == rb.index and ra.margin == rb.margin
+
+    grown.delete(ids)
+    assert grown.n == 1500
+    back = MultiTableIndex(cfg).fit(corpus.x[:1500])
+    for b in range(queries.shape[0]):
+        ra, rb = grown.query(queries[b]), back.query(queries[b])
+        assert np.array_equal(ra.candidates, rb.candidates)
+        assert ra.index == rb.index and ra.margin == rb.margin
+
+
+def test_delete_never_answered(corpus, queries):
+    mt = MultiTableIndex(_cfg(tables=2)).fit(corpus.x)
+    res = mt.query_batch(queries)
+    victims = np.unique(res.ids[res.ids >= 0])
+    mt.delete(victims)
+    res2 = mt.query_batch(queries)
+    for b in range(queries.shape[0]):
+        assert not np.intersect1d(res2.candidates[b], victims).size
+    with pytest.raises(KeyError):
+        mt.delete(victims[:1])     # double delete
+
+
+def test_query_batch_equals_query_loop(corpus, queries):
+    """Batched path == loop of single queries, bit for bit."""
+    mt = MultiTableIndex(_cfg(tables=4)).fit(corpus.x)
+    batch = mt.query_batch(queries)
+    for b in range(queries.shape[0]):
+        single = mt.query(queries[b])
+        assert np.array_equal(batch.candidates[b], single.candidates)
+        assert batch.ids[b] == single.index
+        if single.nonempty:
+            assert batch.margins[b] == single.margin   # exact, not allclose
+        assert batch.nonempty[b] == single.nonempty
+
+
+def test_service_micro_batching_order_and_cache(corpus, queries):
+    mt = MultiTableIndex(_cfg(tables=2)).fit(corpus.x)
+    svc = HashQueryService(mt, max_batch=8, cache_size=64)
+
+    want = [mt.query(queries[i]) for i in range(20)]
+    for i in range(20):
+        assert svc.submit(queries[i]) == i
+    assert svc.pending == 20
+    got = svc.flush()
+    assert svc.pending == 0 and len(got) == 20
+    for i in range(20):                      # per-request results in order
+        assert got[i].index == want[i].index
+        assert got[i].margin == want[i].margin
+
+    # second pass: all 20 query codes hit the LRU cache, answers unchanged
+    before = svc.cache_hits
+    again = svc.query_batch(queries[:20])
+    assert svc.cache_hits - before == 20
+    assert [r.index for r in again] == [r.index for r in got]
+    st = svc.stats()
+    assert st["requests"] == 40 and st["batches"] == 6
+    assert st["qps"] > 0 and st["mean_batch_latency_ms"] > 0
+
+    # mutation invalidates the cache
+    mt.insert(corpus.x[:2])
+    before = svc.cache_hits
+    svc.query_batch(queries[:4])
+    assert svc.cache_hits == before
+
+
+def test_service_mask_restricts_answers(corpus, queries):
+    mt = MultiTableIndex(_cfg(tables=2)).fit(corpus.x)
+    svc = HashQueryService(mt, max_batch=16)
+    mask = np.zeros(corpus.x.shape[0], dtype=bool)
+    mask[: corpus.x.shape[0] // 4] = True
+    for res in svc.query_batch(queries, mask=mask):
+        if res.nonempty:
+            assert mask[res.index]
+        else:
+            assert res.index == -1
+
+
+def test_scan_fallback_batch(corpus, queries):
+    mt = MultiTableIndex(_cfg(tables=2)).fit(corpus.x)
+    ids, margins = mt.query_scan_batch(queries[:8], l=32)
+    assert ids.shape == (8,) and np.isfinite(margins).all()
+    # scan answers are real near-minimum-margin points
+    for b in range(8):
+        m = np.abs(corpus.x @ queries[b]) / np.linalg.norm(queries[b])
+        assert (m < margins[b] - 1e-12).sum() < 0.1 * corpus.x.shape[0]
+
+
+def test_scan_fallback_after_heavy_delete(corpus, queries):
+    """Deleted rows must not crowd live answers out of the top-l scan."""
+    mt = MultiTableIndex(_cfg(tables=2)).fit(corpus.x[:200])
+    mt.delete(np.arange(190))
+    ids, margins = mt.query_scan_batch(queries[:4], l=8)
+    assert (ids >= 190).all() and np.isfinite(margins).all()
+    mt.delete(np.arange(190, 200))            # now empty
+    ids, margins = mt.query_scan_batch(queries[:4], l=8)
+    assert (ids == -1).all() and np.isinf(margins).all()
+
+
+def test_index_stats(corpus):
+    mt = MultiTableIndex(_cfg(tables=3)).fit(corpus.x)
+    st = mt.stats()
+    assert st["tables"] == 3 and len(st["per_table"]) == 3
+    assert st["n"] == corpus.x.shape[0]
+    assert all(s["n"] == corpus.x.shape[0] for s in st["per_table"])

@@ -1,6 +1,8 @@
 """Single-table multi-probe lookup == brute-force Hamming ball."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.tables import SingleHashTable, hamming_ball_keys
