@@ -14,11 +14,11 @@ def _section(title):
     print(f"\n### {title}")
 
 
-def smoke() -> None:
+def smoke(json_path: str | None = None) -> None:
     """Fast CI path: import every benchmark module (catches bit-rot) and run
-    a miniature serving sweep end to end."""
+    a miniature serving sweep plus the fused-scan benchmark end to end."""
     from benchmarks import (fig2_collision, fig34_active_learning,  # noqa: F401
-                            roofline_table, tables_efficiency)
+                            roofline_table, serving_scan, tables_efficiency)
 
     _section("smoke — serving sweep (tiny)")
     t0 = time.perf_counter()
@@ -27,10 +27,15 @@ def smoke() -> None:
     print(f"# smoke ok: {len(rows)} metrics in "
           f"{time.perf_counter() - t0:.1f}s")
 
+    _section("smoke — fused vs unfused Hamming scan")
+    t0 = time.perf_counter()
+    serving_scan.run(json_path=json_path, smoke=True)
+    print(f"# scan smoke ok in {time.perf_counter() - t0:.1f}s")
 
-def main() -> None:
+
+def main(json_path: str | None = None) -> None:
     from benchmarks import (fig2_collision, fig34_active_learning,
-                            roofline_table, tables_efficiency)
+                            roofline_table, serving_scan, tables_efficiency)
 
     summary: list[tuple[str, float, str]] = []
 
@@ -66,6 +71,12 @@ def main() -> None:
     summary.append(("serving_sweep", (time.perf_counter() - t0) * 1e6,
                     "qps/latency/recall per L + batch speedup"))
 
+    _section("Serving — fused vs unfused Hamming scan")
+    t0 = time.perf_counter()
+    serving_scan.run(json_path=json_path)
+    summary.append(("serving_scan_fused", (time.perf_counter() - t0) * 1e6,
+                    "qps/p50/recall + modeled-vs-measured HBM bytes"))
+
     _section("Roofline table (from dry-run artifacts)")
     t0 = time.perf_counter()
     roofline_table.run()
@@ -79,7 +90,13 @@ def main() -> None:
 
 
 if __name__ == "__main__":
+    json_path = None
+    if "--json" in sys.argv:
+        i = sys.argv.index("--json")
+        if i + 1 >= len(sys.argv) or sys.argv[i + 1].startswith("--"):
+            sys.exit("--json requires a file path argument")
+        json_path = sys.argv[i + 1]
     if "--smoke" in sys.argv:
-        smoke()
+        smoke(json_path)
     else:
-        main()
+        main(json_path)

@@ -47,6 +47,15 @@ print(f"after insert/delete: n={index.n}, version={index.version}")
 post = service.query_batch(ws[:8])          # cache invalidated automatically
 print("post-update answers:", [r.index for r in post])
 
-# -- device-side batched Hamming scan (the shardable no-table fallback) ------
-ids, scan_margins = index.query_scan_batch(ws[:8], l=32)
-print("scan fallback ids:", ids.tolist())
+# -- device-side batched Hamming scan (the shardable no-table path) ----------
+# One fused kernel launch covers all 4 tables and the whole batch; the
+# result object is interchangeable with the probe path above.
+scan = index.query_scan_batch(ws[:8], l=32)
+print("scan ids:", scan.ids.tolist())
+
+# The service can serve the same traffic entirely from the fused scan:
+scan_service = HashQueryService(index, mode="scan", scan_l=32)
+scan_results = scan_service.query_batch(ws[:8])
+assert [r.index for r in scan_results] == scan.ids.tolist()
+print("scan service:", {k: round(v, 2) if isinstance(v, float) else v
+                        for k, v in scan_service.stats().items()})

@@ -19,6 +19,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.utils.bits import hamming_packed
 
+# Matches kernels.hamming.DIST_SENTINEL: fill distance for impossible top-k
+# slots (l > n).  Kept as a literal so this module stays importable without
+# the kernels package.
+DIST_SENTINEL = 0x3FFFFFFF
+
 
 def shard_map_compat(fn, mesh, in_specs, out_specs):
     """jax.shard_map (>= 0.5, `check_vma`) or the jax 0.4.x
@@ -54,26 +59,62 @@ def hamming_topk_batch(codes, queries, l: int):
     return -neg, idx
 
 
-def _local_then_merge(codes_shard, query, l: int, axis: str):
-    d = hamming_packed(codes_shard, query[None, :])
-    neg, idx = jax.lax.top_k(-d, l)
+@partial(jax.jit, static_argnames=("l",))
+def hamming_topk_grouped(codes, queries, l: int):
+    """Grouped scan, pure-jnp: group g's queries vs group g's codes only.
+
+    Same contract as kernels.ops.hamming_topk_grouped (the Pallas fused
+    path): codes (G, n, W), queries (G, B, W) -> (dists (G, B, l),
+    ids (G, B, l)) sorted ascending by (distance, id); when l > n the tail
+    columns carry (DIST_SENTINEL, -1).  One XLA dispatch regardless of G —
+    the multi-table scan folds its L tables into G.
+    """
+    g, n, w = codes.shape
+    d = hamming_packed(codes[:, None, :, :], queries[:, :, None, :])  # G,B,n
+    le = min(l, n)
+    neg, idx = jax.lax.top_k(-d, le)
+    dists, ids = -neg, idx
+    if le < l:
+        pad = [(0, 0), (0, 0), (0, l - le)]
+        dists = jnp.pad(dists, pad, constant_values=DIST_SENTINEL)
+        ids = jnp.pad(ids, pad, constant_values=-1)
+    return dists, ids
+
+
+def _local_then_merge(codes_shard, query, l: int, axis: str,
+                      use_kernel: bool):
+    if use_kernel:
+        # fused Pallas scan+select: the shard's distance vector stays in
+        # VMEM; only l (distance, id) pairs reach HBM before the gather.
+        from repro.kernels import ops
+        cand_d, idx = ops.hamming_topk(codes_shard, query, l)
+    else:
+        d = hamming_packed(codes_shard, query[None, :])
+        neg, idx = jax.lax.top_k(-d, l)
+        cand_d = -neg
     offset = jax.lax.axis_index(axis) * codes_shard.shape[0]
-    cand_d = -neg
-    cand_i = (idx + offset).astype(jnp.int32)
+    # impossible slots (l > shard rows) stay -1 instead of aliasing the
+    # previous shard's last row once the offset is added
+    cand_i = jnp.where(idx < 0, -1, idx + offset).astype(jnp.int32)
     all_d = jax.lax.all_gather(cand_d, axis).reshape(-1)
     all_i = jax.lax.all_gather(cand_i, axis).reshape(-1)
     neg2, sel = jax.lax.top_k(-all_d, l)
     return -neg2, all_i[sel]
 
 
-def hamming_topk_sharded(codes, query, l: int, mesh, axis: str = "data"):
+def hamming_topk_sharded(codes, query, l: int, mesh, axis: str = "data",
+                         use_kernel: bool = True):
     """Distributed top-l Hamming scan over a row-sharded code table.
 
     codes must be shardable by `axis` on dim 0.  Returns replicated
-    (dists, idx) — idx are global row ids.
+    (dists, idx) — idx are global row ids.  The local stage runs the fused
+    Pallas kernel by default (``use_kernel=False`` falls back to the
+    pure-jnp scan); the all-gather merge is unchanged either way, and ties
+    still resolve to the lowest global row id because shards are contiguous
+    row ranges gathered in shard order.
     """
     fn = shard_map_compat(
-        partial(_local_then_merge, l=l, axis=axis),
+        partial(_local_then_merge, l=l, axis=axis, use_kernel=use_kernel),
         mesh=mesh,
         in_specs=(P(axis, None), P()),
         out_specs=(P(), P()),

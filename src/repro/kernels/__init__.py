@@ -1,6 +1,8 @@
 # Pallas TPU kernels for the paper's compute hot-spots:
 #   bilinear_hash — fused projection+sign+bitpack database hashing
 #   hamming       — packed-code popcount distance scan (serving hot loop)
+#                   + fused top-k scan+select (multi-table grouped grid)
 #   lbh_grad      — fused LBH surrogate-gradient chain (eq. 16-18)
 # ops.py holds the jit'd public wrappers; ref.py the pure-jnp oracles.
+# README.md here documents the serving-scan HBM traffic model.
 from repro.kernels import ops, ref

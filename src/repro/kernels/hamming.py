@@ -1,13 +1,32 @@
-"""Pallas TPU kernel: packed-code Hamming distance scan.
+"""Pallas TPU kernels: packed-code Hamming distance scan and fused top-k.
 
 dist[i] = popcount( XOR(codes[i, :], query[:]) ) summed over words.
 
 This is the serving-side hot loop of the index: a memory-bound streaming
 pass over the code table (k/8 bytes per point — the information-theoretic
-minimum).  TPU exposes no popcount instruction, so the kernel uses the SWAR
+minimum).  TPU exposes no popcount instruction, so the kernels use the SWAR
 bit-trick (shift/mask adds) on 32-bit lanes in VMEM; the table is read from
-HBM exactly once.  Top-L selection runs on the (n,) int32 distances with
-jax.lax.top_k (negligible traffic: 4 bytes/point vs the scan).
+HBM exactly once.
+
+Two families of kernels live here:
+
+- ``hamming_distance{_batch}_kernel`` — emit the full (n,) / (n, B) int32
+  distance matrix to HBM and leave selection to jax.lax.top_k.  Fine for
+  B=1 (4 bytes/point vs k/8-byte codes), but at B=32, k=128 the distance
+  matrix costs 2·n·B·4 = 256 bytes/point of HBM round-trip against a
+  16-byte/point code table — the scan stops being bandwidth-bound on codes.
+- ``hamming_topk_fused_kernel`` — fuse selection into the scan.  Each grid
+  block popcounts its (block_n, W) tile against its B queries into VMEM
+  scratch and selects the block-local smallest-l candidates there
+  (deterministic ties: lowest row index wins); only (grid, B, l) candidate
+  (distance, row-id) pairs ever reach HBM.  A tiny second-stage merge over
+  grid·l ≪ n rows (see kernels/ops.py) yields the final (B, l) answer,
+  bit-identical to lax.top_k over the full distance matrix.
+
+The fused kernel runs on a (groups, blocks-per-group) grid: the code table
+may be G stacked sub-tables (multi-table serving stacks L tables of
+n_live rows each) and each block is matched against only its own group's
+B query rows — so an L-table batched query is ONE kernel launch.
 """
 from __future__ import annotations
 
@@ -16,8 +35,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pallas_compat import CompilerParams
+
+# Sentinel distance for masked (padded / out-of-range) rows: far above any
+# real Hamming distance (<= 32·W) but negatable in int32.
+DIST_SENTINEL = 0x3FFFFFFF
 
 
 def _popcount_u32(x):
@@ -66,6 +90,81 @@ def _batch_kernel(codes_ref, queries_ref, out_ref, *, n_words: int):
         x = jnp.bitwise_xor(codes[:, w][:, None], queries[:, w][None, :])
         acc += _popcount_u32(x)
     out_ref[...] = acc
+
+
+def _topk_fused_kernel(codes_ref, queries_ref, out_d_ref, out_i_ref, acc_ref,
+                       *, n_words: int, l: int, block_n: int, n_valid: int):
+    """One grid step: scan a (block_n, W) code tile against this group's B
+    queries and emit the block-local smallest-l (distance, row-id) pairs.
+
+    The (block_n, B) distance tile lives only in VMEM scratch (``acc_ref``)
+    — it is never written to HBM.  Selection is l rounds of masked argmin;
+    ``jnp.min`` over the row-iota of the minima keeps ties deterministic
+    (lowest row index wins), matching lax.top_k's stable order.
+    """
+    codes = codes_ref[0]                      # (block_n, W)
+    queries = queries_ref[0]                  # (B, W)
+    acc = jnp.zeros((codes.shape[0], queries.shape[0]), jnp.int32)
+    for w in range(n_words):
+        x = jnp.bitwise_xor(codes[:, w][:, None], queries[:, w][None, :])
+        acc += _popcount_u32(x)
+    # group-local row ids for this block; rows past the group's live region
+    # (block padding) are masked to the sentinel so they always rank last.
+    block_in_group = pl.program_id(1)
+    base = block_in_group * block_n
+    rows = jax.lax.broadcasted_iota(jnp.int32, acc.shape, 0)
+    acc = jnp.where(base + rows >= n_valid, jnp.int32(DIST_SENTINEL), acc)
+    acc_ref[...] = acc
+    big_row = jnp.int32(jnp.iinfo(jnp.int32).max)
+
+    def select_one(j, _):
+        acc = acc_ref[...]
+        dmin = jnp.min(acc, axis=0)                               # (B,)
+        hit = acc == dmin[None, :]
+        rmin = jnp.min(jnp.where(hit, rows, big_row), axis=0)     # (B,)
+        out_d_ref[0, 0, :, pl.dslice(j, 1)] = dmin[:, None]
+        out_i_ref[0, 0, :, pl.dslice(j, 1)] = (base + rmin)[:, None]
+        acc_ref[...] = jnp.where(rows == rmin[None, :],
+                                 jnp.int32(DIST_SENTINEL), acc)
+        return _
+
+    jax.lax.fori_loop(0, l, select_one, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("l", "n_valid", "block_n",
+                                             "interpret"))
+def hamming_topk_fused_kernel(codes, queries, l: int, n_valid: int, *,
+                              block_n: int = 2048, interpret: bool = False):
+    """Fused scan+select over G stacked code groups in ONE device launch.
+
+    codes: (G, n_pad, W) uint32 with n_pad % block_n == 0; queries:
+    (G, B, W) uint32; n_valid: live rows per group (rows >= n_valid are
+    padding).  Returns (dists, ids): (G, grid, B, l) int32 block-local
+    candidates, ids group-local in [0, n_pad); masked slots carry
+    DIST_SENTINEL.  l must satisfy l <= block_n.
+    """
+    g, n_pad, w = codes.shape
+    b = queries.shape[1]
+    grid_n = n_pad // block_n
+    out_shape = jax.ShapeDtypeStruct((g, grid_n, b, l), jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_topk_fused_kernel, n_words=w, l=l,
+                          block_n=block_n, n_valid=n_valid),
+        grid=(g, grid_n),
+        in_specs=[
+            pl.BlockSpec((1, block_n, w), lambda t, i: (t, i, 0)),
+            pl.BlockSpec((1, b, w), lambda t, i: (t, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, b, l), lambda t, i: (t, i, 0, 0)),
+            pl.BlockSpec((1, 1, b, l), lambda t, i: (t, i, 0, 0)),
+        ],
+        out_shape=[out_shape, out_shape],
+        scratch_shapes=[pltpu.VMEM((block_n, b), jnp.int32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(codes, queries)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))

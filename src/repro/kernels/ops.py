@@ -12,18 +12,29 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.bilinear_hash import bilinear_hash_kernel
-from repro.kernels.hamming import (hamming_distance_batch_kernel,
-                                   hamming_distance_kernel)
+from repro.kernels.hamming import (DIST_SENTINEL,
+                                   hamming_distance_batch_kernel,
+                                   hamming_distance_kernel,
+                                   hamming_topk_fused_kernel)
 from repro.kernels.lbh_grad import lbh_chain_kernel
 from repro.utils.bits import n_words
 
 WORD = 32
+SUBLANE = 8   # f32/i32 sublane quantum: row-block sizes must be multiples
 
 
 def _interpret_default(interpret):
     if interpret is None:
         return jax.default_backend() != "tpu"
     return interpret
+
+
+def _block_rows(n: int, block_n: int) -> int:
+    """Row-block size for an n-row scan: at most block_n, at least
+    min(n, 256), rounded UP to the sublane quantum (a raw min(block_n, n)
+    could pick e.g. 300, which is not a legal (8, 128)-tiled block)."""
+    bn = min(block_n, max(256, n))
+    return -(-bn // SUBLANE) * SUBLANE
 
 
 def _pad_to(x, axis: int, mult: int):
@@ -69,7 +80,7 @@ def hamming_distances(codes, query, *, block_n: int = 2048,
                       interpret: bool | None = None):
     """(n,) int32 distances between packed code rows and one packed query."""
     n = codes.shape[0]
-    bn = min(block_n, max(256, n))
+    bn = _block_rows(n, block_n)
     padded = _pad_to(codes, 0, bn)
     d = hamming_distance_kernel(padded, query, block_n=bn,
                                 interpret=_interpret_default(interpret))
@@ -79,10 +90,15 @@ def hamming_distances(codes, query, *, block_n: int = 2048,
 @functools.partial(jax.jit, static_argnames=("l", "block_n", "interpret"))
 def hamming_topk(codes, query, l: int, *, block_n: int = 2048,
                  interpret: bool | None = None):
-    """Smallest-l Hamming matches: (dists (l,), idx (l,))."""
-    d = hamming_distances(codes, query, block_n=block_n, interpret=interpret)
-    neg, idx = jax.lax.top_k(-d, l)
-    return -neg, idx
+    """Smallest-l Hamming matches: (dists (l,), idx (l,)).
+
+    Routed through the fused scan+select kernel — the full distance vector
+    never leaves VMEM.  Bit-identical to lax.top_k(-dists, l) (ties break
+    to the lowest index); slots past n carry DIST_SENTINEL / id -1.
+    """
+    d, idx = hamming_topk_grouped(codes[None], query[None, None, :], l,
+                                  block_n=block_n, interpret=interpret)
+    return d[0, 0], idx[0, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
@@ -90,7 +106,7 @@ def hamming_distances_batch(codes, queries, *, block_n: int = 2048,
                             interpret: bool | None = None):
     """(B, n) int32 distances between one code table and B packed queries."""
     n = codes.shape[0]
-    bn = min(block_n, max(256, n))
+    bn = _block_rows(n, block_n)
     padded = _pad_to(codes, 0, bn)
     # sublane-align the query batch; extra rows are scanned then dropped.
     q = _pad_to(queries, 0, 8)
@@ -102,11 +118,72 @@ def hamming_distances_batch(codes, queries, *, block_n: int = 2048,
 @functools.partial(jax.jit, static_argnames=("l", "block_n", "interpret"))
 def hamming_topk_batch(codes, queries, l: int, *, block_n: int = 2048,
                        interpret: bool | None = None):
-    """Batched smallest-l matches: (dists (B, l), idx (B, l))."""
-    d = hamming_distances_batch(codes, queries, block_n=block_n,
-                                interpret=interpret)
-    neg, idx = jax.lax.top_k(-d, l)
-    return -neg, idx
+    """Batched smallest-l matches: (dists (B, l), idx (B, l)).
+
+    Fused scan+select: HBM traffic is the code table plus O(grid·B·l)
+    candidate pairs instead of the full (n, B) distance matrix (see
+    scan_traffic_model).  Bit-identical to lax.top_k over the distances.
+    """
+    d, idx = hamming_topk_grouped(codes[None], queries[None], l,
+                                  block_n=block_n, interpret=interpret)
+    return d[0], idx[0]
+
+
+@functools.partial(jax.jit, static_argnames=("l", "block_n", "interpret"))
+def hamming_topk_grouped(codes, queries, l: int, *, block_n: int = 2048,
+                         interpret: bool | None = None):
+    """Fused smallest-l scan over G stacked code groups, ONE kernel launch.
+
+    codes: (G, n, W) uint32 — G sub-tables over the same row space (the
+    multi-table index stacks its L tables' live codes); queries: (G, B, W)
+    uint32 — group g's queries are matched against group g's codes only.
+    Returns (dists (G, B, l) int32, ids (G, B, l) int32) with ids local to
+    the group's row space, sorted ascending by (distance, id) — bit-identical
+    to per-group jax.lax.top_k(-dists).  When l > n the tail columns carry
+    (DIST_SENTINEL, -1).
+    """
+    g, n, w = codes.shape
+    b = queries.shape[1]
+    bn = _block_rows(n, block_n)
+    padded = _pad_to(codes, 1, bn)
+    q = _pad_to(queries, 1, SUBLANE)
+    l_k = min(l, bn)    # a block holds bn rows; l_k = bn already emits all
+    cd, ci = hamming_topk_fused_kernel(
+        padded, q, l_k, n, block_n=bn,
+        interpret=_interpret_default(interpret))
+    grid_n = cd.shape[1]
+    # second-stage merge over grid·l_k candidates per (group, query):
+    # lexicographic (distance, id) sort keeps ties at the lowest id, exactly
+    # like lax.top_k over the full distance row.
+    cd = cd.transpose(0, 2, 1, 3).reshape(g, -1, grid_n * l_k)[:, :b]
+    ci = ci.transpose(0, 2, 1, 3).reshape(g, -1, grid_n * l_k)[:, :b]
+    cd, ci = jax.lax.sort((cd, ci), dimension=2, num_keys=2)
+    cd, ci = cd[..., :l], ci[..., :l]
+    if cd.shape[-1] < l:          # l > n_pad: pad out the impossible tail
+        pad = [(0, 0), (0, 0), (0, l - cd.shape[-1])]
+        cd = jnp.pad(cd, pad, constant_values=DIST_SENTINEL)
+        ci = jnp.pad(ci, pad, constant_values=-1)
+    ci = jnp.where(cd >= DIST_SENTINEL, -1, ci)
+    return cd, ci
+
+
+def scan_traffic_model(n: int, w: int, b: int, l: int = 16,
+                       block_n: int = 2048, fused: bool = True) -> int:
+    """Modeled HBM bytes for one batched Hamming scan launch.
+
+    Unfused: stream the code table once (n·W·4) plus write and read back
+    the full (n, B) int32 distance matrix for lax.top_k (2·n·B·4).
+    Fused: stream the code table once plus write and read back only the
+    (grid, B, l) block-local candidate (distance, id) pairs (2·grid·B·l·8).
+    Query bytes (B·W·4) are counted for both; at B=32, k=128, l=16 the
+    fused path cuts traffic ~13.6x (272 -> ~20 bytes/point).
+    """
+    bn = _block_rows(n, block_n)
+    code_bytes = n * w * 4 + b * w * 4
+    if not fused:
+        return code_bytes + 2 * n * b * 4
+    grid = -(-n // bn)
+    return code_bytes + 2 * grid * b * min(l, bn) * 8
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))

@@ -23,7 +23,7 @@ import numpy as np
 from repro.core import functions as F
 from repro.core import learning as L
 from repro.core.indexer import IndexConfig, QueryResult
-from repro.core.search import hamming_topk_batch
+from repro.core.search import hamming_topk_grouped, margin_rerank_batch
 from repro.core.tables import SingleHashTable, keys_of
 from repro.serving import batch_query as bq
 
@@ -36,7 +36,9 @@ class BatchQueryResult:
     candidates: list[np.ndarray]  # per-query short-lists (union over tables)
     lookup_s: float
     rerank_s: float
-    table_hits: np.ndarray   # (L,) candidates contributed per table
+    table_hits: np.ndarray   # (L,) per-table yield: probe path = bucket
+                             # candidates found; scan path = scanned top-l
+                             # slots (B·min(l, n_live), uniform by design)
     ids_topk: np.ndarray | None = None      # (B, l) when queried with l > 1
     margins_topk: np.ndarray | None = None  # (B, l), +inf past the valid set
 
@@ -56,8 +58,9 @@ class MultiTableIndex:
         self.version = 0                    # bumped on insert/delete
         self.fit_s = 0.0
         self._x_dev = None
-        self._codes_dev: list | None = None   # live rows only
+        self._codes_dev = None        # (L, n_live, W) stacked live codes
         self._live_ids: np.ndarray | None = None
+        self._live_ids_dev = None
 
     # -- build ---------------------------------------------------------------
 
@@ -99,6 +102,7 @@ class MultiTableIndex:
         self._x_dev = None
         self._codes_dev = None
         self._live_ids = None
+        self._live_ids_dev = None
         self.version += 1
         self.fit_s = time.perf_counter() - t0
         return self
@@ -134,6 +138,7 @@ class MultiTableIndex:
         self._x_dev = None
         self._codes_dev = None
         self._live_ids = None
+        self._live_ids_dev = None
         self.version += 1
         return ids
 
@@ -149,6 +154,7 @@ class MultiTableIndex:
         self.active[ids] = False
         self._codes_dev = None
         self._live_ids = None
+        self._live_ids_dev = None
         self.version += 1
 
     # -- lookup / query ------------------------------------------------------
@@ -202,40 +208,97 @@ class MultiTableIndex:
                            res.candidates[0], bool(res.nonempty[0]),
                            res.lookup_s, res.rerank_s)
 
-    def query_scan_batch(self, w, l: int = 16):
-        """Device-side batched fallback: per-table top-l Hamming scan, union,
-        exact re-rank — no host tables involved, so it shards like
-        core.search.hamming_topk_sharded.
-
-        Tombstoned rows are compacted out of the device code cache before
-        the scan, so deleted rows can never crowd live answers out of the
-        top-l slots."""
-        w = np.atleast_2d(np.asarray(w, np.float32))
-        qcodes = bq.hash_queries_all(self.families, w)        # (L, B, W)
+    def _scan_state(self):
+        """Device-resident stacked live codes for the fused scan: one
+        (L, n_live, W) array (tombstones compacted out, so deleted rows can
+        never crowd live answers out of the top-l slots) plus the
+        live-row -> stable-id map, rebuilt only when the index mutates."""
         if self._codes_dev is None:
             self._live_ids = np.flatnonzero(self.active)
-            self._codes_dev = [jnp.asarray(c[self._live_ids])
-                               for c in self.codes]
+            self._codes_dev = jnp.asarray(
+                np.stack([c[self._live_ids] for c in self.codes]))
+            self._live_ids_dev = jnp.asarray(self._live_ids)
+        return self._codes_dev, self._live_ids_dev
+
+    def query_scan_batch(self, w, l: int = 16, topk: int = 1,
+                         mask=None) -> BatchQueryResult:
+        """Device-side batched scan: ONE fused Hamming kernel launch for all
+        L tables and B queries, then union/dedup and exact margin re-rank —
+        all on device.  No host tables involved, so it shards like
+        core.search.hamming_topk_sharded.
+
+        The L tables' live codes are stacked as a single (L, n_live, W)
+        device array and L is folded into the query batch (L·B query rows);
+        the grouped kernel matches each table's code rows against only that
+        table's query rows, so launch count is independent of L.
+
+        NOTE the parameter split: ``l`` is the per-table scan depth (the
+        Hamming short-list size, as in the seed-era signature), NOT the
+        number of answers — ``topk`` is.  query_batch(w, l=k) corresponds
+        to query_scan_batch(w, topk=k), with ``l`` controlling recall.
+        ids_topk/margins_topk are set when topk > 1 and always have
+        exactly topk columns (impossible slots: id -1 / margin +inf).
+        mask: optional (n,) bool restricting answers, as in query_batch.
+        Returns a BatchQueryResult interchangeable with the host-table
+        query_batch path (candidates come back sorted by id rather than
+        in probe order).
+        """
+        w = np.atleast_2d(np.asarray(w, np.float32))
+        b = w.shape[0]
+        t0 = time.perf_counter()
+        codes_dev, live_ids_dev = self._scan_state()
         n_live = self._live_ids.shape[0]
+        hits = np.zeros(self.num_tables, dtype=np.int64)
         if n_live == 0:
-            b = w.shape[0]
-            return (np.full(b, -1, np.int64), np.full(b, np.inf, np.float32))
+            ids_pad = np.full((b, topk), -1, np.int64)
+            m_pad = np.full((b, topk), np.inf, np.float32)
+            return BatchQueryResult(
+                np.full(b, -1, np.int64), np.full(b, np.inf, np.float32),
+                np.zeros(b, dtype=bool),
+                [np.empty(0, np.int64) for _ in range(b)],
+                time.perf_counter() - t0, 0.0, hits,
+                ids_topk=ids_pad if topk > 1 else None,
+                margins_topk=m_pad if topk > 1 else None)
+        qcodes = bq.hash_queries_all(self.families, w)        # (L, B, W)
         if self.config.use_kernels:
             from repro.kernels import ops
-            topk = lambda codes, q: ops.hamming_topk_batch(
-                codes, q, min(l, n_live))
+            _, idx = ops.hamming_topk_grouped(codes_dev, qcodes, l)
         else:
-            topk = lambda codes, q: hamming_topk_batch(
-                codes, q, min(l, n_live))
-        per_table = []
-        for t in range(self.num_tables):
-            _, idx = topk(self._codes_dev[t], qcodes[t])
-            per_table.append(self._live_ids[np.asarray(idx, dtype=np.int64)])
-        cands = [bq.union_candidates([per_table[t][b]
-                                      for t in range(self.num_tables)])
-                 for b in range(w.shape[0])]
-        ids, margins, nonempty = bq.batched_rerank(self.x, w, cands, 1)
-        return ids[:, 0], margins[:, 0]
+            _, idx = hamming_topk_grouped(codes_dev, qcodes, l)
+        # device-side union/dedup: per query, sort the L·l live-row ids and
+        # invalidate repeats and sentinel (-1) slots.
+        flat = jnp.transpose(idx, (1, 0, 2)).reshape(b, -1)   # (B, L*l)
+        flat = jnp.sort(flat, axis=1)
+        uniq = flat >= 0
+        uniq &= jnp.concatenate(
+            [jnp.ones((b, 1), bool), flat[:, 1:] != flat[:, :-1]], axis=1)
+        gids = live_ids_dev[jnp.clip(flat, 0, n_live - 1)]    # global ids
+        # mask narrows answers/rerank, but (as in the probe path) NOT the
+        # reported candidate short-lists — backends stay interchangeable.
+        valid = uniq if mask is None else (
+            uniq & jnp.asarray(mask, bool)[gids])
+        lookup_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        margins, top = margin_rerank_batch(
+            self.x, jnp.asarray(w, jnp.float32), gids, valid, topk)
+        margins = np.asarray(margins)
+        top = np.asarray(top).astype(np.int64)
+        top[~np.isfinite(margins)] = -1
+        if margins.shape[1] < topk:   # topk > L*l candidates: pad, not clip
+            padw = ((0, 0), (0, topk - margins.shape[1]))
+            margins = np.pad(margins, padw, constant_values=np.inf)
+            top = np.pad(top, padw, constant_values=-1)
+        hits = np.asarray((idx >= 0).sum(axis=(1, 2)), dtype=np.int64)
+        gids_np, valid_np = np.asarray(gids), np.asarray(valid)
+        uniq_np = np.asarray(uniq)
+        cands = [gids_np[i, uniq_np[i]].astype(np.int64) for i in range(b)]
+        rerank_s = time.perf_counter() - t0
+        return BatchQueryResult(
+            top[:, 0], margins[:, 0], valid_np.any(axis=1), cands,
+            lookup_s, rerank_s, hits,
+            ids_topk=top if topk > 1 else None,
+            margins_topk=margins if topk > 1 else None)
 
     def stats(self) -> dict:
         per_table = [t.stats() for t in self.tables]

@@ -12,6 +12,14 @@ The exact-margin re-rank always runs, because margins depend on w itself,
 not just its code.  The cache is dropped whenever the index mutates
 (``index.version``) and bypassed when a row mask is given (mask-dependent
 results must not be shared).
+
+Two interchangeable backends (``mode``):
+
+- ``"probe"`` (default) — host hash-table multi-probe + candidate cache,
+  the paper's lookup path.
+- ``"scan"`` — the device-resident fused top-k Hamming scan
+  (``MultiTableIndex.query_scan_batch``): one kernel launch for all L
+  tables and the whole micro-batch, no host tables and no candidate cache.
 """
 from __future__ import annotations
 
@@ -29,8 +37,12 @@ class HashQueryService:
     """Batched front end with micro-batching, candidate cache and counters."""
 
     def __init__(self, index: MultiTableIndex, max_batch: int | None = None,
-                 cache_size: int = 1024):
+                 cache_size: int = 1024, mode: str = "probe",
+                 scan_l: int = 16):
+        assert mode in ("probe", "scan"), mode
         self.index = index
+        self.mode = mode
+        self.scan_l = int(scan_l)
         self.max_batch = int(max_batch if max_batch is not None
                              else index.config.batch)
         assert self.max_batch >= 1
@@ -97,6 +109,8 @@ class HashQueryService:
             self._cache.popitem(last=False)
 
     def _answer(self, ws: np.ndarray, mask) -> list[QueryResult]:
+        if self.mode == "scan":
+            return self._answer_scan(ws, mask)
         t_start = time.perf_counter()
         b = ws.shape[0]
         use_cache = mask is None and self.cache_size > 0
@@ -135,6 +149,25 @@ class HashQueryService:
         self.latencies_s.append(elapsed)
         return [QueryResult(int(ids[i, 0]), float(margins[i, 0]), cands[i],
                             bool(nonempty[i]), lookup_s / b, rerank_s / b)
+                for i in range(b)]
+
+    def _answer_scan(self, ws: np.ndarray, mask) -> list[QueryResult]:
+        """Fused-scan backend: one grouped Hamming kernel launch per
+        micro-batch covering every table; no candidate cache (the scan is
+        device-bound — there is no host probe work to save)."""
+        t_start = time.perf_counter()
+        b = ws.shape[0]
+        res = self.index.query_scan_batch(ws, l=self.scan_l, mask=mask)
+        elapsed = time.perf_counter() - t_start
+        self.requests += b
+        self.batches += 1
+        self.busy_s += elapsed
+        self.lookup_s += res.lookup_s
+        self.rerank_s += res.rerank_s
+        self.latencies_s.append(elapsed)
+        return [QueryResult(int(res.ids[i]), float(res.margins[i]),
+                            res.candidates[i], bool(res.nonempty[i]),
+                            res.lookup_s / b, res.rerank_s / b)
                 for i in range(b)]
 
     # -- counters ------------------------------------------------------------

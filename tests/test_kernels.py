@@ -65,6 +65,99 @@ def test_hamming_batch_vs_single(rng, n, b, w):
         assert (gathered == np.asarray(d[i])).all()
 
 
+@pytest.mark.parametrize("n,b,w,l", [
+    (1000, 1, 1, 8), (512, 32, 4, 16), (100, 5, 2, 32), (2049, 9, 4, 7),
+    (300, 3, 2, 5),            # ragged n: not a multiple of the sublane (8)
+    (1, 1, 1, 1),
+])
+def test_hamming_topk_fused_vs_oracle(rng, n, b, w, l):
+    """Fused scan+select == lax.top_k over the full distance matrix, bit
+    for bit (including tie order: lowest index wins)."""
+    codes = rng.integers(0, 2**32, (n, w), dtype=np.uint32)
+    qs = rng.integers(0, 2**32, (b, w), dtype=np.uint32)
+    d, i = ops.hamming_topk_batch(jnp.asarray(codes), jnp.asarray(qs), l)
+    full = np.stack([np_hamming_packed(codes, q[None, :]) for q in qs])
+    neg, oidx = jax.lax.top_k(-jnp.asarray(full), min(l, n))
+    assert np.array_equal(np.asarray(d), np.asarray(-neg))
+    assert np.array_equal(np.asarray(i), np.asarray(oidx))
+
+
+def test_hamming_topk_fused_ties(rng):
+    """Massively tied distances: selection must be by lowest row index."""
+    codes = np.zeros((600, 2), np.uint32)        # all rows identical
+    qs = rng.integers(0, 2**32, (4, 2), dtype=np.uint32)
+    d, i = ops.hamming_topk_batch(jnp.asarray(codes), jnp.asarray(qs), 12)
+    assert np.array_equal(np.asarray(i), np.tile(np.arange(12), (4, 1)))
+    assert (np.asarray(d) == np.asarray(d)[:, :1]).all()
+    # two-level ties: half the rows at one distance, half at another
+    codes[300:] = 0xFFFFFFFF
+    q = np.zeros((1, 2), np.uint32)
+    d, i = ops.hamming_topk_batch(jnp.asarray(codes), jnp.asarray(q), 310)
+    assert np.array_equal(np.asarray(i)[0, :300], np.arange(300))
+    assert np.array_equal(np.asarray(i)[0, 300:], np.arange(300, 310))
+
+
+def test_hamming_topk_fused_l_exceeds_n(rng):
+    """l > n: the possible slots match the oracle, the rest are sentinels."""
+    from repro.kernels.hamming import DIST_SENTINEL
+    codes = rng.integers(0, 2**32, (7, 1), dtype=np.uint32)
+    qs = rng.integers(0, 2**32, (3, 1), dtype=np.uint32)
+    d, i = ops.hamming_topk_batch(jnp.asarray(codes), jnp.asarray(qs), 20)
+    assert d.shape == (3, 20)
+    full = np.stack([np_hamming_packed(codes, q[None, :]) for q in qs])
+    neg, oidx = jax.lax.top_k(-jnp.asarray(full), 7)
+    assert np.array_equal(np.asarray(d)[:, :7], np.asarray(-neg))
+    assert np.array_equal(np.asarray(i)[:, :7], np.asarray(oidx))
+    assert (np.asarray(d)[:, 7:] == DIST_SENTINEL).all()
+    assert (np.asarray(i)[:, 7:] == -1).all()
+
+
+@pytest.mark.parametrize("g,n,b,w,l", [(3, 500, 6, 2, 9), (2, 100, 1, 1, 4)])
+def test_hamming_topk_grouped_vs_per_group(rng, g, n, b, w, l):
+    """One grouped launch == a loop of per-group batched top-k calls."""
+    codes = rng.integers(0, 2**32, (g, n, w), dtype=np.uint32)
+    qs = rng.integers(0, 2**32, (g, b, w), dtype=np.uint32)
+    dg, ig = ops.hamming_topk_grouped(jnp.asarray(codes), jnp.asarray(qs), l)
+    assert dg.shape == (g, b, l)
+    for t in range(g):
+        db, ib = ops.hamming_topk_batch(jnp.asarray(codes[t]),
+                                        jnp.asarray(qs[t]), l)
+        assert np.array_equal(np.asarray(dg[t]), np.asarray(db))
+        assert np.array_equal(np.asarray(ig[t]), np.asarray(ib))
+    # and the pure-jnp grouped fallback obeys the same contract
+    from repro.core.search import hamming_topk_grouped as jnp_grouped
+    dj, ij = jnp_grouped(jnp.asarray(codes), jnp.asarray(qs), l)
+    assert np.array_equal(np.asarray(dg), np.asarray(dj))
+    assert np.array_equal(np.asarray(ig), np.asarray(ij))
+
+
+def test_hamming_sublane_misaligned_n(rng):
+    """n that rounds to a non-multiple-of-8 block (the old bn=min(block,n)
+    bug) must still produce exact distances and top-k."""
+    for n in (300, 257, 11):
+        codes = rng.integers(0, 2**32, (n, 2), dtype=np.uint32)
+        q = rng.integers(0, 2**32, (2,), dtype=np.uint32)
+        got = np.asarray(ops.hamming_distances(jnp.asarray(codes),
+                                               jnp.asarray(q)))
+        want = np_hamming_packed(codes, q[None, :])
+        assert np.array_equal(got, want)
+        d, i = ops.hamming_topk(jnp.asarray(codes), jnp.asarray(q),
+                                min(8, n))
+        assert np.array_equal(np.asarray(d), np.sort(want)[:min(8, n)])
+
+
+def test_scan_traffic_model():
+    """Fused traffic must beat unfused by >= 4x at the paper's serving
+    point (B=32, k=128 -> W=4) — the whole point of the fused kernel."""
+    n, w, b, l = 1_000_000, 4, 32, 16
+    unfused = ops.scan_traffic_model(n, w, b, l, fused=False)
+    fused = ops.scan_traffic_model(n, w, b, l, fused=True)
+    assert unfused / fused >= 4.0
+    # B=1 fused never moves more bytes than unfused
+    assert (ops.scan_traffic_model(n, w, 1, l, fused=True)
+            <= ops.scan_traffic_model(n, w, 1, l, fused=False))
+
+
 def test_hamming_topk_order(rng):
     codes = rng.integers(0, 2**32, (500, 2), dtype=np.uint32)
     q = codes[123]   # exact match present

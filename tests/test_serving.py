@@ -153,25 +153,124 @@ def test_service_mask_restricts_answers(corpus, queries):
             assert res.index == -1
 
 
-def test_scan_fallback_batch(corpus, queries):
+def test_scan_batch(corpus, queries):
     mt = MultiTableIndex(_cfg(tables=2)).fit(corpus.x)
-    ids, margins = mt.query_scan_batch(queries[:8], l=32)
-    assert ids.shape == (8,) and np.isfinite(margins).all()
+    res = mt.query_scan_batch(queries[:8], l=32)
+    assert res.ids.shape == (8,) and np.isfinite(res.margins).all()
+    assert res.nonempty.all() and res.table_hits.shape == (2,)
     # scan answers are real near-minimum-margin points
     for b in range(8):
         m = np.abs(corpus.x @ queries[b]) / np.linalg.norm(queries[b])
-        assert (m < margins[b] - 1e-12).sum() < 0.1 * corpus.x.shape[0]
+        assert (m < res.margins[b] - 1e-12).sum() < 0.1 * corpus.x.shape[0]
+        # the candidate short-list is a dedup'd union over both tables
+        cand = res.candidates[b]
+        assert cand.size == np.unique(cand).size <= 2 * 32
 
 
-def test_scan_fallback_after_heavy_delete(corpus, queries):
+def test_scan_batch_after_heavy_delete(corpus, queries):
     """Deleted rows must not crowd live answers out of the top-l scan."""
     mt = MultiTableIndex(_cfg(tables=2)).fit(corpus.x[:200])
     mt.delete(np.arange(190))
-    ids, margins = mt.query_scan_batch(queries[:4], l=8)
-    assert (ids >= 190).all() and np.isfinite(margins).all()
+    res = mt.query_scan_batch(queries[:4], l=8)
+    assert (res.ids >= 190).all() and np.isfinite(res.margins).all()
     mt.delete(np.arange(190, 200))            # now empty
-    ids, margins = mt.query_scan_batch(queries[:4], l=8)
-    assert (ids == -1).all() and np.isinf(margins).all()
+    res = mt.query_scan_batch(queries[:4], l=8)
+    assert (res.ids == -1).all() and np.isinf(res.margins).all()
+    assert not res.nonempty.any()
+    # empty index still honours the (B, topk) shape contract
+    res = mt.query_scan_batch(queries[:4], l=8, topk=3)
+    assert res.ids_topk.shape == (4, 3) and (res.ids_topk == -1).all()
+    assert np.isinf(res.margins_topk).all()
+
+
+def test_scan_single_launch_any_tables(corpus, queries, monkeypatch):
+    """query_scan_batch issues exactly ONE Hamming scan dispatch no matter
+    how many tables the index holds (L folds into the query batch)."""
+    import repro.serving.multi_table as mtb
+    calls = {"n": 0}
+    real = mtb.hamming_topk_grouped
+
+    def counting(codes, qs, l):
+        calls["n"] += 1
+        return real(codes, qs, l)
+
+    monkeypatch.setattr(mtb, "hamming_topk_grouped", counting)
+    for L in (1, 4):
+        mt = MultiTableIndex(_cfg(tables=L)).fit(corpus.x)
+        calls["n"] = 0
+        res = mt.query_scan_batch(queries, l=16)
+        assert calls["n"] == 1
+        assert res.table_hits.shape == (L,) and (res.table_hits > 0).all()
+
+
+def test_scan_matches_per_table_loop(corpus, queries):
+    """Stacked single-launch scan == the per-table loop it replaced."""
+    mt = MultiTableIndex(_cfg(tables=3)).fit(corpus.x)
+    from repro.core.search import hamming_topk_batch
+    from repro.serving import batch_query as bq
+    res = mt.query_scan_batch(queries[:8], l=16)
+    qcodes = bq.hash_queries_all(mt.families, queries[:8])
+    per_table = []
+    for t in range(3):
+        _, idx = hamming_topk_batch(jax.numpy.asarray(mt.codes[t]),
+                                    qcodes[t], 16)
+        per_table.append(np.asarray(idx, dtype=np.int64))
+    for b in range(8):
+        union = np.unique(np.concatenate([per_table[t][b] for t in range(3)]))
+        assert np.array_equal(np.sort(res.candidates[b]), union)
+    ids, margins, _ = bq.batched_rerank(
+        mt.x, queries[:8], [np.unique(np.concatenate(
+            [per_table[t][b] for t in range(3)])) for b in range(8)], 1)
+    assert np.array_equal(res.ids, ids[:, 0])
+    assert np.array_equal(res.margins, margins[:, 0])
+
+
+def test_scan_kernel_path_matches_jnp(corpus, queries):
+    """use_kernels=True (fused Pallas scan) answers == pure-jnp scan."""
+    mt_j = MultiTableIndex(_cfg(tables=2)).fit(corpus.x)
+    mt_k = MultiTableIndex(_cfg(tables=2, use_kernels=True)).fit(corpus.x)
+    rj = mt_j.query_scan_batch(queries[:8], l=16, topk=4)
+    rk = mt_k.query_scan_batch(queries[:8], l=16, topk=4)
+    assert np.array_equal(rj.ids, rk.ids)
+    assert np.array_equal(rj.margins, rk.margins)
+    assert np.array_equal(rj.ids_topk, rk.ids_topk)
+    for b in range(8):
+        assert np.array_equal(rj.candidates[b], rk.candidates[b])
+
+
+def test_scan_topk_wider_than_candidates(corpus, queries):
+    """topk > L*l must pad to the requested width, matching query_batch's
+    (B, topk) shape contract (impossible slots: id -1 / margin +inf)."""
+    mt = MultiTableIndex(_cfg(tables=2)).fit(corpus.x)
+    res = mt.query_scan_batch(queries[:4], l=4, topk=40)
+    assert res.ids_topk.shape == (4, 40)
+    assert res.margins_topk.shape == (4, 40)
+    valid = res.ids_topk >= 0
+    assert np.isfinite(res.margins_topk[valid]).all()
+    assert np.isinf(res.margins_topk[~valid]).all()
+    assert valid.sum(axis=1).max() <= 2 * 4     # at most L*l candidates
+
+
+def test_scan_mask_and_service_mode(corpus, queries):
+    mt = MultiTableIndex(_cfg(tables=2)).fit(corpus.x)
+    mask = np.zeros(corpus.x.shape[0], dtype=bool)
+    mask[: corpus.x.shape[0] // 4] = True
+    res = mt.query_scan_batch(queries[:8], l=32, mask=mask)
+    nomask = mt.query_scan_batch(queries[:8], l=32)
+    for b in range(8):
+        if res.nonempty[b]:
+            assert mask[res.ids[b]]
+        # like the probe path, mask narrows answers but not the reported
+        # candidate short-list
+        assert np.array_equal(res.candidates[b], nomask.candidates[b])
+    # scan-mode service == direct scan calls, and counters advance
+    svc = HashQueryService(mt, max_batch=16, mode="scan", scan_l=32)
+    got = svc.query_batch(queries[:16])
+    want = mt.query_scan_batch(queries[:16], l=32)
+    assert [r.index for r in got] == want.ids.tolist()
+    assert [r.margin for r in got] == want.margins.tolist()
+    st = svc.stats()
+    assert st["requests"] == 16 and st["batches"] == 1 and st["qps"] > 0
 
 
 def test_index_stats(corpus):
