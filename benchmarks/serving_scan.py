@@ -10,6 +10,12 @@ the scan, only (grid, B, l) candidates reach HBM.  The traffic model
 acceptance ratio is about the hardware regime the kernel targets, not the
 CI machine.
 
+Beyond the fused-vs-unfused comparison this also measures the row-sharded
+scan (``query_scan_batch(mesh=)`` over every local device, answers checked
+against the single-device path) and the delete-churn story: 50%+1 deletes
+trigger auto-compaction, after which QPS and recall are re-measured on the
+survivors (answers must stay inside the survivor id set — ids are stable).
+
 Writes a JSON trajectory record (``BENCH_serving.json``) when ``json_path``
 is given; CI runs this in ``--smoke`` mode and uploads the file as an
 artifact so the numbers accumulate a history across PRs.
@@ -61,15 +67,18 @@ def _measured_bytes(fn, *args):
         return None
 
 
-def _traffic_model(l):
+def _traffic_model(l, tables: int = 1):
+    """Model the launch query_scan_batch actually runs: a grouped scan over
+    g=tables stacked code groups (g=1 used to under-count every byte term
+    by a factor of L).  Ratios are g-invariant; totals are not."""
     out = {}
     for b in (1, PAPER_POINT["b"]):
         un = ops.scan_traffic_model(PAPER_POINT["n"], PAPER_POINT["w"], b,
-                                    l, fused=False)
+                                    l, fused=False, g=tables)
         fu = ops.scan_traffic_model(PAPER_POINT["n"], PAPER_POINT["w"], b,
-                                    l, fused=True)
+                                    l, fused=True, g=tables)
         out[f"b{b}"] = {"unfused_bytes": un, "fused_bytes": fu,
-                        "ratio": un / fu}
+                        "ratio": un / fu, "tables": tables}
     return out
 
 
@@ -143,14 +152,58 @@ def run(json_path: str | None = None, n: int = 20000, d: int = 64,
         "median_margin_rank": float(np.median(ranks)),
     }
 
+    # -- sharded scan: stacked live codes row-sharded over local devices ----
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    mt.query_scan_batch(ws, l=l, mesh=mesh)        # warm + build shard layout
+    lat_sh = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        res_sh = mt.query_scan_batch(ws, l=l, mesh=mesh)
+        lat_sh.append(time.perf_counter() - t0)
+    sharded = {
+        "shards": jax.device_count(),
+        "qps_batch": batch / float(np.median(lat_sh)),
+        "p50_batch_ms": 1e3 * float(np.median(lat_sh)),
+        "matches_single_device": bool(
+            np.array_equal(res.ids, res_sh.ids)
+            and np.array_equal(res.margins, res_sh.margins)),
+    }
+
+    # -- delete churn + auto-compaction: recall on the survivors ------------
+    n_rows = mt.stats()["rows"]
+    victims = np.arange(n_rows // 2 + 1)           # past the 0.5 threshold
+    mt.delete(victims)
+    keep = np.arange(victims.size, n_rows)
+    mt.query_scan_batch(ws, l=l)     # warm the post-compact-shape jit caches
+    lat_c = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        res_c = mt.query_scan_batch(ws, l=l)
+        lat_c.append(time.perf_counter() - t0)
+    ranks_c = np.asarray(
+        [(margins_all[keep, i] < res_c.margins[i] - 1e-12).sum()
+         for i in range(batch)])
+    compaction = {
+        "deleted": int(victims.size),
+        "rows_before": int(n_rows),
+        "rows_after": int(mt.stats()["rows"]),
+        "compactions": int(mt.compactions),
+        "qps_batch_post_compact": batch / float(np.median(lat_c)),
+        "recall_at%d" % recall_top: float(np.mean(ranks_c < recall_top)),
+        "median_margin_rank": float(np.median(ranks_c)),
+        "stable_ids": bool((np.isin(res_c.ids[res_c.ids >= 0], keep)).all()),
+    }
+
     record = {
         "config": {"n": n, "d": d, "bits": bits, "k_model": 128,
                    "batch": batch, "l": l, "tables": tables,
                    "backend": jax.default_backend(), "smoke": smoke},
-        "model_hbm_bytes": _traffic_model(l),
+        "model_hbm_bytes": _traffic_model(l, tables),
         "measured_hbm_bytes": measured,
         "kernel_ms": kernel,
         "serving": serving,
+        "serving_sharded": sharded,
+        "compaction": compaction,
     }
     ratio = record["model_hbm_bytes"]["b32"]["ratio"]
     print("scenario,metric,value")
@@ -162,6 +215,14 @@ def run(json_path: str | None = None, n: int = 20000, d: int = 64,
         print(f"kernel_{b},unfused_ms,{row['unfused_ms']:.2f}")
     for k, v in serving.items():
         print(f"serving,{k},{v:.2f}")
+    for k, v in sharded.items():
+        print(f"serving_sharded,{k},{float(v):.2f}")
+    for k, v in compaction.items():
+        print(f"compaction,{k},{float(v):.2f}")
+    if not sharded["matches_single_device"]:
+        raise SystemExit("sharded scan answers diverged from single-device")
+    if not compaction["stable_ids"]:
+        raise SystemExit("post-compaction answers left the survivor id set")
     qps_ok = serving["qps_b1"] >= 0.8 * serving["qps_b1_legacy"]
     print(f"# modeled B=32 traffic ratio {ratio:.1f}x (gate: >=4); "
           f"B=1 scan QPS {serving['qps_b1']:.1f} vs legacy "

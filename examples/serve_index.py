@@ -47,9 +47,24 @@ print(f"after insert/delete: n={index.n}, version={index.version}")
 post = service.query_batch(ws[:8])          # cache invalidated automatically
 print("post-update answers:", [r.index for r in post])
 
+# -- heavy delete churn: compaction keeps the tables from growing forever ----
+# Tombstoned rows pile up in codes/tables/x until the dead fraction passes
+# IndexConfig.compact_threshold (default 0.5), when the index compacts
+# itself; ids stay stable — answers still use the original insert/fit ids.
+index.delete(np.arange(0, 6000))
+st = index.stats()
+print(f"after churn: n={st['n']}, rows={st['rows']}, "
+      f"compactions={st['compactions']}")
+post = service.query_batch(ws[:8])
+assert all(r.index >= 6000 for r in post if r.nonempty)
+print("post-compaction answers (stable ids):", [r.index for r in post])
+
 # -- device-side batched Hamming scan (the shardable no-table path) ----------
 # One fused kernel launch covers all 4 tables and the whole batch; the
-# result object is interchangeable with the probe path above.
+# result object is interchangeable with the probe path above.  With more
+# than one device, pass a mesh to row-shard the code stack:
+#   mesh = jax.make_mesh((jax.device_count(),), ("data",))
+#   index.query_scan_batch(ws, l=32, mesh=mesh)   # bit-identical answers
 scan = index.query_scan_batch(ws[:8], l=32)
 print("scan ids:", scan.ids.tolist())
 

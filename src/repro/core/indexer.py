@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.core import functions as F
 from repro.core import learning as L
-from repro.core.search import hamming_topk, margin_rerank
+from repro.core.search import env_use_kernels, hamming_topk, margin_rerank
 from repro.core.tables import SingleHashTable
 
 
@@ -32,13 +32,19 @@ class IndexConfig:
     # serving knobs (serving.MultiTableIndex / HashQueryService)
     tables: int = 1                # number of independent hash tables L
     batch: int = 32                # micro-batch size for the query service
+    # auto-compact the multi-table index once this fraction of rows is
+    # tombstoned (None = never; delete churn then grows tables forever)
+    compact_threshold: float | None = 0.5
     # LBH learning
     lbh_sample: int = 1000
     lbh_steps: int = 150
     lbh_lr: float = 0.03
     # EH dimension-sampling trick (paper §5.2); None = exact d^2 embedding
     eh_sample_dims: int | None = None
-    use_kernels: bool = False      # route hashing through the Pallas kernels
+    # route hashing/scans through the Pallas kernels; the default honours
+    # the REPRO_USE_KERNELS env var (CI's fallback leg sets it to 0)
+    use_kernels: bool = dataclasses.field(
+        default_factory=lambda: env_use_kernels(False))
 
 
 @dataclasses.dataclass
@@ -132,7 +138,11 @@ class HyperplaneIndex:
             _, idx = ops.hamming_topk(self.codes, qcode, l)
         else:
             _, idx = hamming_topk(self.codes, qcode, l)
-        margins, ids = margin_rerank(self.x, w, idx, 1)
+        # l > n slots carry id -1 and always sit at the sorted tail — slice
+        # them off before the re-rank gather (x[-1] would silently alias the
+        # last row)
+        margins, ids = margin_rerank(
+            self.x, w, idx[:min(l, self.codes.shape[0])], 1)
         return int(ids[0]), float(margins[0])
 
 

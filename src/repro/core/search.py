@@ -11,7 +11,8 @@ independent of n.
 """
 from __future__ import annotations
 
-from functools import partial
+import os
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +24,28 @@ from repro.utils.bits import hamming_packed
 # slots (l > n).  Kept as a literal so this module stays importable without
 # the kernels package.
 DIST_SENTINEL = 0x3FFFFFFF
+
+
+def env_use_kernels(default: bool) -> bool:
+    """Default for the use_kernel(s) knobs, overridable via the
+    ``REPRO_USE_KERNELS`` env var (CI runs a leg with it set to 0 so the
+    pure-jnp fallbacks stay exercised).  Explicit arguments always win —
+    the env var only moves the default."""
+    env = os.environ.get("REPRO_USE_KERNELS")
+    if env is None or not env.strip():
+        return default
+    return env.strip().lower() not in ("0", "false", "no", "off")
+
+
+def _pad_topk(dists, ids, l: int):
+    """Pad the trailing top-k axis out to l slots with the impossible-slot
+    contract shared by every scan path: (DIST_SENTINEL, id -1)."""
+    have = dists.shape[-1]
+    if have >= l:
+        return dists, ids
+    pad = [(0, 0)] * (dists.ndim - 1) + [(0, l - have)]
+    return (jnp.pad(dists, pad, constant_values=DIST_SENTINEL),
+            jnp.pad(ids, pad, constant_values=-1))
 
 
 def shard_map_compat(fn, mesh, in_specs, out_specs):
@@ -41,10 +64,12 @@ def hamming_topk(codes, query, l: int):
     """Single-device scan: smallest-distance top-l.
 
     codes: (n, W) uint32; query: (W,) uint32 -> (dists (l,), idx (l,)).
+    When l > n the tail slots carry (DIST_SENTINEL, -1), matching the
+    kernel path (kernels.ops.hamming_topk).
     """
     d = hamming_packed(codes, query[None, :])
-    neg, idx = jax.lax.top_k(-d, l)
-    return -neg, idx
+    neg, idx = jax.lax.top_k(-d, min(l, d.shape[0]))
+    return _pad_topk(-neg, idx, l)
 
 
 @partial(jax.jit, static_argnames=("l",))
@@ -52,11 +77,11 @@ def hamming_topk_batch(codes, queries, l: int):
     """Batched scan: top-l per query in one pass.
 
     codes: (n, W) uint32; queries: (B, W) uint32
-    -> (dists (B, l), idx (B, l)).
+    -> (dists (B, l), idx (B, l)); l > n tails are (DIST_SENTINEL, -1).
     """
     d = hamming_packed(codes[None, :, :], queries[:, None, :])   # (B, n)
-    neg, idx = jax.lax.top_k(-d, l)
-    return -neg, idx
+    neg, idx = jax.lax.top_k(-d, min(l, d.shape[1]))
+    return _pad_topk(-neg, idx, l)
 
 
 @partial(jax.jit, static_argnames=("l",))
@@ -71,14 +96,8 @@ def hamming_topk_grouped(codes, queries, l: int):
     """
     g, n, w = codes.shape
     d = hamming_packed(codes[:, None, :, :], queries[:, :, None, :])  # G,B,n
-    le = min(l, n)
-    neg, idx = jax.lax.top_k(-d, le)
-    dists, ids = -neg, idx
-    if le < l:
-        pad = [(0, 0), (0, 0), (0, l - le)]
-        dists = jnp.pad(dists, pad, constant_values=DIST_SENTINEL)
-        ids = jnp.pad(ids, pad, constant_values=-1)
-    return dists, ids
+    neg, idx = jax.lax.top_k(-d, min(l, n))
+    return _pad_topk(-neg, idx, l)
 
 
 def _local_then_merge(codes_shard, query, l: int, axis: str,
@@ -90,8 +109,8 @@ def _local_then_merge(codes_shard, query, l: int, axis: str,
         cand_d, idx = ops.hamming_topk(codes_shard, query, l)
     else:
         d = hamming_packed(codes_shard, query[None, :])
-        neg, idx = jax.lax.top_k(-d, l)
-        cand_d = -neg
+        neg, idx = jax.lax.top_k(-d, min(l, d.shape[0]))
+        cand_d, idx = _pad_topk(-neg, idx, l)
     offset = jax.lax.axis_index(axis) * codes_shard.shape[0]
     # impossible slots (l > shard rows) stay -1 instead of aliasing the
     # previous shard's last row once the offset is added
@@ -103,23 +122,122 @@ def _local_then_merge(codes_shard, query, l: int, axis: str,
 
 
 def hamming_topk_sharded(codes, query, l: int, mesh, axis: str = "data",
-                         use_kernel: bool = True):
+                         use_kernel: bool | None = None):
     """Distributed top-l Hamming scan over a row-sharded code table.
 
     codes must be shardable by `axis` on dim 0.  Returns replicated
     (dists, idx) — idx are global row ids.  The local stage runs the fused
     Pallas kernel by default (``use_kernel=False`` falls back to the
-    pure-jnp scan); the all-gather merge is unchanged either way, and ties
-    still resolve to the lowest global row id because shards are contiguous
-    row ranges gathered in shard order.
+    pure-jnp scan, bit-identical including l > shard-rows sentinels;
+    ``None`` reads REPRO_USE_KERNELS); the all-gather merge is unchanged
+    either way, and ties still resolve to the lowest global row id because
+    shards are contiguous row ranges gathered in shard order.
     """
-    fn = shard_map_compat(
+    if use_kernel is None:
+        use_kernel = env_use_kernels(True)
+    return _sharded_fn(mesh, axis, l, use_kernel)(codes, query)
+
+
+@lru_cache(maxsize=256)
+def _sharded_fn(mesh, axis: str, l: int, use_kernel: bool):
+    """Jitted shard_map closure for hamming_topk_sharded, cached per
+    (mesh, axis, l, use_kernel) so steady serving traffic doesn't rebuild
+    and re-trace the distributed scan on every call."""
+    return jax.jit(shard_map_compat(
         partial(_local_then_merge, l=l, axis=axis, use_kernel=use_kernel),
         mesh=mesh,
         in_specs=(P(axis, None), P()),
         out_specs=(P(), P()),
-    )
-    return fn(codes, query)
+    ))
+
+
+def _grouped_local_then_merge(codes_shard, queries, l: int, l_local: int,
+                              n_valid: int, axis: str, use_kernel: bool):
+    """Local grouped scan + small all-gather merge for one shard.
+
+    codes_shard: (G, rows, W) — this shard's contiguous row range of every
+    group; queries: (G, B, W) replicated.  Emits the shard's top-l_local
+    per (group, query) with global row ids, then lex-sorts the gathered
+    S·l_local candidates by (distance, id) so ties resolve to the lowest
+    global id, exactly like the single-device grouped scan.
+    """
+    if use_kernel:
+        from repro.kernels import ops
+        cd, ci = ops.hamming_topk_grouped(codes_shard, queries, l_local)
+    else:
+        cd, ci = hamming_topk_grouped(codes_shard, queries, l_local)
+    offset = jax.lax.axis_index(axis) * codes_shard.shape[1]
+    gi = jnp.where(ci < 0, -1, ci + offset).astype(jnp.int32)
+    # rows past the true table end (shard-divisibility padding) turn into
+    # sentinel slots; l_local = l + pad_rows guarantees they could not have
+    # crowded a real global-top-l row out of this shard's local list.
+    pad_row = gi >= n_valid
+    cd = jnp.where(pad_row, jnp.int32(DIST_SENTINEL), cd)
+    gi = jnp.where(pad_row, -1, gi)
+    all_d = jax.lax.all_gather(cd, axis)          # (S, G, B, l_local)
+    all_i = jax.lax.all_gather(gi, axis)
+    g, b = queries.shape[0], queries.shape[1]
+    all_d = jnp.moveaxis(all_d, 0, 2).reshape(g, b, -1)
+    all_i = jnp.moveaxis(all_i, 0, 2).reshape(g, b, -1)
+    all_d, all_i = jax.lax.sort((all_d, all_i), dimension=2, num_keys=2)
+    return all_d[:, :, :l], all_i[:, :, :l]
+
+
+def hamming_topk_grouped_sharded(codes, queries, l: int, mesh,
+                                 axis: str = "data",
+                                 use_kernel: bool | None = None,
+                                 n_valid: int | None = None):
+    """Distributed grouped top-l scan: the multi-table analogue of
+    ``hamming_topk_sharded``.
+
+    codes: (G, n, W) uint32, row-sharded along dim 1 over mesh axis `axis`
+    (n need not divide the shard count — rows are padded and masked out);
+    queries: (G, B, W) uint32, replicated.  Callers holding an already
+    shard-aligned device array (serving.MultiTableIndex pads host-side
+    before device_put so no resharding happens here) pass ``n_valid`` =
+    the true row count; rows >= n_valid are treated as padding.  Returns
+    replicated (dists (G, B, l), ids (G, B, l)) with ids global to each
+    group's row space, bit-identical to the single-device grouped scan
+    (kernels.ops.hamming_topk_grouped / the pure-jnp fallback) including
+    tie order (lowest global id) and l > n_valid sentinels
+    (DIST_SENTINEL, -1).
+
+    Each shard runs ONE local grouped launch for all G groups x B queries;
+    only the (S, G, B, l_local) candidate pairs cross the interconnect —
+    O(G·B·l·S·8) bytes, independent of n.  l_local = l plus the padding
+    rows a single shard can see: padding is a contiguous tail, so at most
+    one shard mixes real and padding rows, and the extra slots guarantee
+    padding can never crowd a real global-top-l row out of its local list.
+    """
+    if use_kernel is None:
+        use_kernel = env_use_kernels(True)
+    g, n, w = codes.shape
+    if n_valid is None:
+        n_valid = n
+    shards = mesh.shape[axis]
+    pad = (-n) % shards
+    if pad:
+        codes = jnp.pad(codes, ((0, 0), (0, pad), (0, 0)))
+    n_pad = n + pad
+    l_local = l + min(n_pad - n_valid, n_pad // shards)
+    fn = _grouped_sharded_fn(mesh, axis, l, l_local, n_valid, use_kernel)
+    return fn(codes, queries)
+
+
+@lru_cache(maxsize=256)
+def _grouped_sharded_fn(mesh, axis: str, l: int, l_local: int, n_valid: int,
+                        use_kernel: bool):
+    """Jitted shard_map closure for hamming_topk_grouped_sharded, cached so
+    the serving scan hot path doesn't rebuild and re-trace the distributed
+    scan on every micro-batch (n_valid changes per index mutation, so churn
+    rotates cache entries; the LRU bound keeps that in check)."""
+    return jax.jit(shard_map_compat(
+        partial(_grouped_local_then_merge, l=l, l_local=l_local,
+                n_valid=n_valid, axis=axis, use_kernel=use_kernel),
+        mesh=mesh,
+        in_specs=(P(None, axis, None), P()),
+        out_specs=(P(), P()),
+    ))
 
 
 @partial(jax.jit, static_argnames=("l",))

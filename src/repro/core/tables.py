@@ -111,13 +111,15 @@ class SingleHashTable:
         # so fit-only callers keep the fully vectorized constructor
         self._id_key: dict[int, int] | None = None
         self._bkeys: np.ndarray | None = None   # cached bucket-key array
-        keys = keys_of(packed)
-        order = np.argsort(keys, kind="stable")
-        sorted_keys = keys[order]
-        starts = np.flatnonzero(np.r_[True, sorted_keys[1:] != sorted_keys[:-1]])
-        bounds = np.r_[starts, self.n]
-        for s, e in zip(bounds[:-1], bounds[1:]):
-            self.buckets[int(sorted_keys[s])] = order[s:e].astype(np.int64)
+        if self.n:       # an empty table (e.g. full-churn compaction) has
+            keys = keys_of(packed)        # no buckets to build
+            order = np.argsort(keys, kind="stable")
+            sorted_keys = keys[order]
+            starts = np.flatnonzero(
+                np.r_[True, sorted_keys[1:] != sorted_keys[:-1]])
+            bounds = np.r_[starts, self.n]
+            for s, e in zip(bounds[:-1], bounds[1:]):
+                self.buckets[int(sorted_keys[s])] = order[s:e].astype(np.int64)
 
     @property
     def num_buckets(self) -> int:

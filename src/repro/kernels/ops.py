@@ -168,22 +168,31 @@ def hamming_topk_grouped(codes, queries, l: int, *, block_n: int = 2048,
 
 
 def scan_traffic_model(n: int, w: int, b: int, l: int = 16,
-                       block_n: int = 2048, fused: bool = True) -> int:
+                       block_n: int = 2048, fused: bool = True,
+                       g: int = 1) -> int:
     """Modeled HBM bytes for one batched Hamming scan launch.
 
-    Unfused: stream the code table once (n·W·4) plus write and read back
-    the full (n, B) int32 distance matrix for lax.top_k (2·n·B·4).
-    Fused: stream the code table once plus write and read back only the
-    (grid, B, l) block-local candidate (distance, id) pairs (2·grid·B·l·8).
-    Query bytes (B·W·4) are counted for both; at B=32, k=128, l=16 the
-    fused path cuts traffic ~13.6x (272 -> ~20 bytes/point).
+    g is the group count of the launch: a grouped scan (G stacked
+    sub-tables, the multi-table serving path) streams G·n·W·4 code bytes
+    and G·B·W·4 query bytes, and emits G·grid·B·l candidate pairs — every
+    term scales by G, so ratios are G-invariant but per-launch totals are
+    not (g=1 used to under-model what query_scan_batch actually runs by
+    exactly a factor of L).
+
+    Unfused: stream the code groups once (g·n·W·4) plus write and read back
+    the full g·(n, B) int32 distance matrices for lax.top_k (2·g·n·B·4).
+    Fused: stream the code groups once plus write and read back only the
+    (g, grid, B, l) block-local candidate (distance, id) pairs
+    (2·g·grid·B·l·8).  Query bytes (g·B·W·4) are counted for both; at
+    B=32, k=128, l=16 the fused path cuts traffic ~13.6x
+    (272 -> ~20 bytes/point, any g).
     """
     bn = _block_rows(n, block_n)
-    code_bytes = n * w * 4 + b * w * 4
+    code_bytes = g * (n * w * 4 + b * w * 4)
     if not fused:
-        return code_bytes + 2 * n * b * 4
+        return code_bytes + 2 * g * n * b * 4
     grid = -(-n // bn)
-    return code_bytes + 2 * grid * b * min(l, bn) * 8
+    return code_bytes + 2 * g * grid * b * min(l, bn) * 8
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))

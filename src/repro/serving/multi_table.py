@@ -7,9 +7,13 @@ so a MultiTableIndex with L=1 reproduces a single-table index built from
 ``fold_in(key, 0)`` exactly, and the candidate set grows monotonically with
 L for a fixed seed — more tables can only add recall.
 
-Ids are stable across mutations: ``insert`` appends rows (never renumbers),
-``delete`` tombstones them out of every table while their feature rows stay
-behind so outstanding candidate ids keep indexing ``x`` correctly.
+Ids are stable across mutations: ``insert`` assigns fresh ids (never
+renumbers), ``delete`` tombstones rows out of every table, and ``compact``
+(auto-triggered past ``IndexConfig.compact_threshold`` dead fraction, or
+called directly after heavy delete churn) physically drops tombstoned rows
+from ``codes``/``tables``/``x`` while a stable-id remap table keeps every
+outstanding id resolving — results are always reported in stable-id space,
+and internal row numbers never escape.
 """
 from __future__ import annotations
 
@@ -19,11 +23,15 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core import functions as F
 from repro.core import learning as L
 from repro.core.indexer import IndexConfig, QueryResult
-from repro.core.search import hamming_topk_grouped, margin_rerank_batch
+from repro.core.search import (hamming_topk_grouped,
+                               hamming_topk_grouped_sharded,
+                               margin_rerank_batch)
 from repro.core.tables import SingleHashTable, keys_of
 from repro.serving import batch_query as bq
 
@@ -52,15 +60,25 @@ class MultiTableIndex:
         assert self.num_tables >= 1
         self.families: list = []
         self.tables: list[SingleHashTable] = []
-        self.codes: list[np.ndarray] = []   # per-table (n, W) uint32, host
-        self.x_np: np.ndarray | None = None  # (n, d) host copy, rows stable
-        self.active: np.ndarray | None = None  # (n,) bool tombstone mask
-        self.version = 0                    # bumped on insert/delete
+        self.codes: list[np.ndarray] = []   # per-table (rows, W) uint32, host
+        self.x_np: np.ndarray | None = None  # (rows, d) host copy
+        self.active: np.ndarray | None = None  # (rows,) bool tombstone mask
+        # stable-id machinery: rows are internal (compaction renumbers them);
+        # every id that crosses the API boundary is a stable id.  ids_np maps
+        # row -> stable id (strictly increasing, so row-order ties == id-order
+        # ties); _row_of maps stable id -> current row, -1 once compacted away.
+        self.ids_np: np.ndarray | None = None
+        self._row_of: np.ndarray | None = None
+        self._next_id = 0
+        self.compactions = 0
+        self.version = 0                    # bumped on insert/delete/compact
         self.fit_s = 0.0
         self._x_dev = None
-        self._codes_dev = None        # (L, n_live, W) stacked live codes
-        self._live_ids: np.ndarray | None = None
-        self._live_ids_dev = None
+        self._codes_dev = None        # (L, n_live[_pad], W) stacked live codes
+        self._live_rows: np.ndarray | None = None
+        self._live_rows_dev = None
+        self._scan_key = None         # (mesh, axis) the device codes are laid
+                                      # out for; None = single device
 
     # -- build ---------------------------------------------------------------
 
@@ -98,14 +116,33 @@ class MultiTableIndex:
         self.tables = [SingleHashTable(c, self.config.bits)
                        for c in self.codes]
         self.x_np = np.asarray(x)
-        self.active = np.ones(self.x_np.shape[0], dtype=bool)
-        self._x_dev = None
-        self._codes_dev = None
-        self._live_ids = None
-        self._live_ids_dev = None
+        n = self.x_np.shape[0]
+        self.active = np.ones(n, dtype=bool)
+        self.ids_np = np.arange(n, dtype=np.int64)
+        self._row_of = np.arange(n, dtype=np.int64)
+        self._next_id = n
+        self.compactions = 0
+        self._invalidate()
         self.version += 1
         self.fit_s = time.perf_counter() - t0
         return self
+
+    def _invalidate(self, keep_x: bool = False) -> None:
+        """Drop the device-resident caches derived from rows/codes.
+        keep_x: the feature rows are unchanged (tombstone-only delete) —
+        don't force a full (rows, d) re-upload on the next re-rank."""
+        if not keep_x:
+            self._x_dev = None
+        self._codes_dev = None
+        self._live_rows = None
+        self._live_rows_dev = None
+        self._scan_key = None
+
+    def _require_fit(self, op: str) -> None:
+        if self.x_np is None:
+            raise RuntimeError(
+                f"MultiTableIndex.{op} before fit(): build the index with "
+                f"fit(x) before mutating or querying it")
 
     @property
     def n(self) -> int:
@@ -118,44 +155,112 @@ class MultiTableIndex:
             self._x_dev = jnp.asarray(self.x_np)
         return self._x_dev
 
+    # -- stable-id translation -----------------------------------------------
+
+    def rows_to_ids(self, rows: np.ndarray) -> np.ndarray:
+        """Internal row numbers -> stable external ids (-1 passes through).
+        Identity until the first compaction."""
+        rows = np.asarray(rows, dtype=np.int64)
+        out = np.full(rows.shape, -1, dtype=np.int64)
+        m = rows >= 0
+        out[m] = self.ids_np[rows[m]]
+        return out
+
+    def ids_to_rows(self, ids: np.ndarray) -> np.ndarray:
+        """Stable ids -> current rows.  Unknown / compacted-away /
+        tombstoned ids raise KeyError (mirrors the pre-compaction
+        behaviour of deleting an unknown row)."""
+        ids = np.asarray(ids, dtype=np.int64)
+        if ids.size and (ids.min() < 0 or ids.max() >= self._next_id):
+            raise KeyError(f"unknown ids (never assigned): "
+                           f"{ids[(ids < 0) | (ids >= self._next_id)][:8]}")
+        rows = self._row_of[ids]
+        if (rows < 0).any():
+            raise KeyError(f"ids compacted away: {ids[rows < 0][:8]}")
+        return rows
+
+    def mask_to_rows(self, mask) -> np.ndarray | None:
+        """Stable-id-space bool mask -> row-space mask (identity until the
+        first compaction, where stable ids == rows)."""
+        if mask is None:
+            return None
+        return np.asarray(mask, dtype=bool)[self.ids_np]
+
     # -- dynamic updates -----------------------------------------------------
 
     def insert(self, x_new) -> np.ndarray:
-        """Append rows to every table; returns the assigned ids."""
+        """Append rows to every table; returns the assigned stable ids."""
+        self._require_fit("insert")
         x_new = np.atleast_2d(np.asarray(x_new, np.float32))
         if x_new.shape[0] == 0:
             return np.empty((0,), dtype=np.int64)
         new_codes = np.asarray(
             bq.hash_database_all(self.families, jnp.asarray(x_new)))
         start = self.x_np.shape[0]
-        ids = np.arange(start, start + x_new.shape[0], dtype=np.int64)
+        rows = np.arange(start, start + x_new.shape[0], dtype=np.int64)
+        ids = np.arange(self._next_id, self._next_id + x_new.shape[0],
+                        dtype=np.int64)
         for t in range(self.num_tables):
-            self.tables[t].insert(new_codes[t], ids)
+            self.tables[t].insert(new_codes[t], rows)
             self.codes[t] = np.concatenate([self.codes[t], new_codes[t]])
         self.x_np = np.concatenate([self.x_np, x_new])
         self.active = np.concatenate(
             [self.active, np.ones(x_new.shape[0], dtype=bool)])
-        self._x_dev = None
-        self._codes_dev = None
-        self._live_ids = None
-        self._live_ids_dev = None
+        self.ids_np = np.concatenate([self.ids_np, ids])
+        self._row_of = np.concatenate([self._row_of, rows])
+        self._next_id += x_new.shape[0]
+        self._invalidate()
         self.version += 1
         return ids
 
     def delete(self, ids) -> None:
-        """Tombstone rows out of every table (ids stay stable)."""
+        """Tombstone rows out of every table (ids stay stable).  An empty
+        delete is a no-op — it must NOT bump ``version`` (which would
+        needlessly drop the service's query-code cache and the device scan
+        state).  Past ``config.compact_threshold`` dead fraction the index
+        compacts itself (see ``compact``)."""
+        self._require_fit("delete")
         ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
-        if not self.active[ids].all():
-            raise KeyError("delete of already-deleted or unknown id")
+        if ids.size == 0:
+            return
         if np.unique(ids).size != ids.size:
             raise KeyError("duplicate ids in delete")
+        rows = self.ids_to_rows(ids)
+        if not self.active[rows].all():
+            raise KeyError("delete of already-deleted or unknown id")
         for t in range(self.num_tables):
-            self.tables[t].delete(ids)
-        self.active[ids] = False
-        self._codes_dev = None
-        self._live_ids = None
-        self._live_ids_dev = None
+            self.tables[t].delete(rows)
+        self.active[rows] = False
+        self._invalidate(keep_x=True)
         self.version += 1
+        thresh = self.config.compact_threshold
+        dead = self.active.size - int(self.active.sum())
+        if thresh is not None and dead > thresh * self.active.size:
+            self.compact()
+
+    def compact(self) -> np.ndarray:
+        """Physically drop tombstoned rows: rebuild ``codes``/``tables``/
+        ``x`` on the survivors and refresh the stable-id remap so every
+        outstanding id keeps resolving.  Without this, delete churn grows
+        the code tables (and the device scan state) forever.  Returns the
+        surviving stable ids; no-op (no version bump) when nothing is dead.
+        """
+        self._require_fit("compact")
+        if self.active.all():
+            return self.ids_np.copy()
+        live = np.flatnonzero(self.active)
+        self.codes = [c[live] for c in self.codes]
+        self.x_np = self.x_np[live]
+        self.ids_np = self.ids_np[live]
+        self.active = np.ones(live.size, dtype=bool)
+        self.tables = [SingleHashTable(c, self.config.bits)
+                       for c in self.codes]
+        self._row_of = np.full(self._next_id, -1, dtype=np.int64)
+        self._row_of[self.ids_np] = np.arange(live.size, dtype=np.int64)
+        self._invalidate()
+        self.version += 1
+        self.compactions += 1
+        return self.ids_np.copy()
 
     # -- lookup / query ------------------------------------------------------
 
@@ -165,8 +270,10 @@ class MultiTableIndex:
 
         qcodes: optional precomputed (L, B, W) query codes (the service
         computes them for its cache keys — no point hashing twice).
-        Returns (per-query unioned candidate lists, per-table hit counts,
-        elapsed seconds)."""
+        Returns (per-query unioned candidate lists IN ROW SPACE — callers
+        must translate with ``rows_to_ids`` before reporting, as the
+        service does — per-table hit counts, elapsed seconds)."""
+        self._require_fit("lookup_batch")
         cfg = self.config
         w = np.atleast_2d(np.asarray(w, np.float32))
         t0 = time.perf_counter()
@@ -189,12 +296,16 @@ class MultiTableIndex:
     def query_batch(self, w, mask=None, l: int = 1) -> BatchQueryResult:
         """Answer B hyperplane queries as one batch.
 
-        mask: optional (n,) bool — restrict answers to these rows (AL uses
-        the unlabeled pool).  Bit-identical to B calls of `query`."""
+        mask: optional bool mask over stable-id space — restrict answers to
+        these points (AL uses the unlabeled pool; identical to row space
+        until the first compaction).  Bit-identical to B calls of `query`."""
         cands, hits, lookup_s = self.lookup_batch(w)
         w = np.atleast_2d(np.asarray(w, np.float32))
         t0 = time.perf_counter()
-        ids, margins, nonempty = bq.batched_rerank(self.x, w, cands, l, mask)
+        ids, margins, nonempty = bq.batched_rerank(self.x, w, cands, l,
+                                                   self.mask_to_rows(mask))
+        ids = self.rows_to_ids(ids)
+        cands = [self.rows_to_ids(c) for c in cands]
         rerank_s = time.perf_counter() - t0
         return BatchQueryResult(ids[:, 0], margins[:, 0], nonempty, cands,
                                 lookup_s, rerank_s, hits,
@@ -208,24 +319,49 @@ class MultiTableIndex:
                            res.candidates[0], bool(res.nonempty[0]),
                            res.lookup_s, res.rerank_s)
 
-    def _scan_state(self):
+    def _scan_state(self, mesh=None, axis: str = "data"):
         """Device-resident stacked live codes for the fused scan: one
         (L, n_live, W) array (tombstones compacted out, so deleted rows can
         never crowd live answers out of the top-l slots) plus the
-        live-row -> stable-id map, rebuilt only when the index mutates."""
-        if self._codes_dev is None:
-            self._live_ids = np.flatnonzero(self.active)
-            self._codes_dev = jnp.asarray(
-                np.stack([c[self._live_ids] for c in self.codes]))
-            self._live_ids_dev = jnp.asarray(self._live_ids)
-        return self._codes_dev, self._live_ids_dev
+        live-row map, rebuilt only when the index mutates or the layout
+        target changes.
 
-    def query_scan_batch(self, w, l: int = 16, topk: int = 1,
-                         mask=None) -> BatchQueryResult:
+        With ``mesh``, the stacked codes are laid out row-sharded over the
+        mesh axis (padded host-side to the shard count so device_put never
+        reshards) — the layout hamming_topk_grouped_sharded scans with one
+        local launch per shard.
+        """
+        key = None if mesh is None else (mesh, axis)
+        if self._codes_dev is None or self._scan_key != key:
+            self._live_rows = np.flatnonzero(self.active)
+            stacked = np.stack([c[self._live_rows] for c in self.codes])
+            if mesh is None:
+                self._codes_dev = jnp.asarray(stacked)
+            else:
+                shards = mesh.shape[axis]
+                pad = (-stacked.shape[1]) % shards
+                if pad:
+                    stacked = np.pad(stacked, ((0, 0), (0, pad), (0, 0)))
+                self._codes_dev = jax.device_put(
+                    stacked, NamedSharding(mesh, P(None, axis, None)))
+            self._live_rows_dev = jnp.asarray(self._live_rows)
+            self._scan_key = key
+        return self._codes_dev, self._live_rows_dev
+
+    def query_scan_batch(self, w, l: int = 16, topk: int = 1, mask=None,
+                         mesh=None, shard_axis: str = "data"
+                         ) -> BatchQueryResult:
         """Device-side batched scan: ONE fused Hamming kernel launch for all
         L tables and B queries, then union/dedup and exact margin re-rank —
-        all on device.  No host tables involved, so it shards like
-        core.search.hamming_topk_sharded.
+        all on device.
+
+        With ``mesh``, the stacked live codes are row-sharded over
+        ``shard_axis`` and the scan runs through
+        core.search.hamming_topk_grouped_sharded — one local launch per
+        shard, O(L·B·l·shards) interconnect bytes for the candidate merge,
+        answers bit-identical to the single-device scan.  Reuse the same
+        mesh object across calls: the sharded layout is cached per
+        (mesh, axis) and rebuilt when it changes.
 
         The L tables' live codes are stacked as a single (L, n_live, W)
         device array and L is folded into the query batch (L·B query rows);
@@ -238,18 +374,17 @@ class MultiTableIndex:
         to query_scan_batch(w, topk=k), with ``l`` controlling recall.
         ids_topk/margins_topk are set when topk > 1 and always have
         exactly topk columns (impossible slots: id -1 / margin +inf).
-        mask: optional (n,) bool restricting answers, as in query_batch.
-        Returns a BatchQueryResult interchangeable with the host-table
-        query_batch path (candidates come back sorted by id rather than
-        in probe order).
+        mask: optional bool mask over stable-id space restricting answers,
+        as in query_batch.  Returns a BatchQueryResult interchangeable with
+        the host-table query_batch path (candidates come back sorted by id
+        rather than in probe order); all reported ids are stable ids.
         """
+        self._require_fit("query_scan_batch")
         w = np.atleast_2d(np.asarray(w, np.float32))
         b = w.shape[0]
         t0 = time.perf_counter()
-        codes_dev, live_ids_dev = self._scan_state()
-        n_live = self._live_ids.shape[0]
         hits = np.zeros(self.num_tables, dtype=np.int64)
-        if n_live == 0:
+        if not self.active.any():
             ids_pad = np.full((b, topk), -1, np.int64)
             m_pad = np.full((b, topk), np.inf, np.float32)
             return BatchQueryResult(
@@ -259,8 +394,14 @@ class MultiTableIndex:
                 time.perf_counter() - t0, 0.0, hits,
                 ids_topk=ids_pad if topk > 1 else None,
                 margins_topk=m_pad if topk > 1 else None)
+        codes_dev, live_rows_dev = self._scan_state(mesh, shard_axis)
+        n_live = self._live_rows.shape[0]
         qcodes = bq.hash_queries_all(self.families, w)        # (L, B, W)
-        if self.config.use_kernels:
+        if mesh is not None:
+            _, idx = hamming_topk_grouped_sharded(
+                codes_dev, qcodes, l, mesh, axis=shard_axis,
+                use_kernel=self.config.use_kernels, n_valid=n_live)
+        elif self.config.use_kernels:
             from repro.kernels import ops
             _, idx = ops.hamming_topk_grouped(codes_dev, qcodes, l)
         else:
@@ -272,16 +413,17 @@ class MultiTableIndex:
         uniq = flat >= 0
         uniq &= jnp.concatenate(
             [jnp.ones((b, 1), bool), flat[:, 1:] != flat[:, :-1]], axis=1)
-        gids = live_ids_dev[jnp.clip(flat, 0, n_live - 1)]    # global ids
+        grows = live_rows_dev[jnp.clip(flat, 0, n_live - 1)]  # global rows
         # mask narrows answers/rerank, but (as in the probe path) NOT the
         # reported candidate short-lists — backends stay interchangeable.
-        valid = uniq if mask is None else (
-            uniq & jnp.asarray(mask, bool)[gids])
+        mask_rows = self.mask_to_rows(mask)
+        valid = uniq if mask_rows is None else (
+            uniq & jnp.asarray(mask_rows)[grows])
         lookup_s = time.perf_counter() - t0
 
         t0 = time.perf_counter()
         margins, top = margin_rerank_batch(
-            self.x, jnp.asarray(w, jnp.float32), gids, valid, topk)
+            self.x, jnp.asarray(w, jnp.float32), grows, valid, topk)
         margins = np.asarray(margins)
         top = np.asarray(top).astype(np.int64)
         top[~np.isfinite(margins)] = -1
@@ -289,10 +431,11 @@ class MultiTableIndex:
             padw = ((0, 0), (0, topk - margins.shape[1]))
             margins = np.pad(margins, padw, constant_values=np.inf)
             top = np.pad(top, padw, constant_values=-1)
+        top = self.rows_to_ids(top)
         hits = np.asarray((idx >= 0).sum(axis=(1, 2)), dtype=np.int64)
-        gids_np, valid_np = np.asarray(gids), np.asarray(valid)
+        grows_np, valid_np = np.asarray(grows), np.asarray(valid)
         uniq_np = np.asarray(uniq)
-        cands = [gids_np[i, uniq_np[i]].astype(np.int64) for i in range(b)]
+        cands = [self.rows_to_ids(grows_np[i, uniq_np[i]]) for i in range(b)]
         rerank_s = time.perf_counter() - t0
         return BatchQueryResult(
             top[:, 0], margins[:, 0], valid_np.any(axis=1), cands,
@@ -302,9 +445,13 @@ class MultiTableIndex:
 
     def stats(self) -> dict:
         per_table = [t.stats() for t in self.tables]
+        rows = self.active.size if self.active is not None else 0
         return {
             "tables": self.num_tables,
             "n": self.n,
+            "rows": rows,
+            "dead_fraction": 1.0 - self.n / rows if rows else 0.0,
+            "compactions": self.compactions,
             "bits": self.config.bits,
             "version": self.version,
             "per_table": per_table,

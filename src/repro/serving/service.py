@@ -20,6 +20,8 @@ Two interchangeable backends (``mode``):
 - ``"scan"`` — the device-resident fused top-k Hamming scan
   (``MultiTableIndex.query_scan_batch``): one kernel launch for all L
   tables and the whole micro-batch, no host tables and no candidate cache.
+  With ``mesh=``, the scan runs row-sharded over the mesh axis — one local
+  launch per shard, answers bit-identical to the single-device scan.
 """
 from __future__ import annotations
 
@@ -38,11 +40,17 @@ class HashQueryService:
 
     def __init__(self, index: MultiTableIndex, max_batch: int | None = None,
                  cache_size: int = 1024, mode: str = "probe",
-                 scan_l: int = 16):
+                 scan_l: int = 16, mesh=None, shard_axis: str = "data"):
         assert mode in ("probe", "scan"), mode
+        assert mesh is None or mode == "scan", "mesh requires mode='scan'"
         self.index = index
         self.mode = mode
         self.scan_l = int(scan_l)
+        # scan-mode row sharding: the index lays its stacked live codes out
+        # over this mesh axis and answers each micro-batch with one local
+        # launch per shard (core.search.hamming_topk_grouped_sharded)
+        self.mesh = mesh
+        self.shard_axis = shard_axis
         self.max_batch = int(max_batch if max_batch is not None
                              else index.config.batch)
         assert self.max_batch >= 1
@@ -136,8 +144,10 @@ class HashQueryService:
                     self._cache_put(keys[i], cand)
 
         t0 = time.perf_counter()
-        ids, margins, nonempty = bq.batched_rerank(self.index.x, ws, cands,
-                                                   1, mask)
+        ids, margins, nonempty = bq.batched_rerank(
+            self.index.x, ws, cands, 1, self.index.mask_to_rows(mask))
+        ids = self.index.rows_to_ids(ids)
+        cands = [self.index.rows_to_ids(c) for c in cands]
         rerank_s = time.perf_counter() - t0
 
         elapsed = time.perf_counter() - t_start
@@ -157,7 +167,9 @@ class HashQueryService:
         device-bound — there is no host probe work to save)."""
         t_start = time.perf_counter()
         b = ws.shape[0]
-        res = self.index.query_scan_batch(ws, l=self.scan_l, mask=mask)
+        res = self.index.query_scan_batch(ws, l=self.scan_l, mask=mask,
+                                          mesh=self.mesh,
+                                          shard_axis=self.shard_axis)
         elapsed = time.perf_counter() - t_start
         self.requests += b
         self.batches += 1

@@ -68,6 +68,90 @@ def test_sharded_hamming_topk():
     assert "ok" in out
 
 
+@pytest.mark.parametrize("shards", [2, 4])
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_sharded_grouped_hamming_topk(shards, use_kernel):
+    """hamming_topk_grouped_sharded == the single-device grouped scan, bit
+    for bit: even and ragged shard sizes, ties across shard boundaries,
+    and l > n sentinels surviving the shard offset."""
+    out = _run(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.search import (DIST_SENTINEL, hamming_topk_grouped,
+                                       hamming_topk_grouped_sharded)
+        uk = {use_kernel}
+        mesh = jax.make_mesh(({shards},), ("data",))
+        rng = np.random.default_rng(0)
+        cases = [(3, 512, 4, 2, 16),    # even shards
+                 (2, 1001, 3, 2, 8),    # ragged: 1001 rows over shards
+                 (2, 37, 3, 2, 40),     # ragged AND l > n
+                 (1, 5, 2, 1, 12)]      # tiny group, l > n
+        for (g, n, b, w, l) in cases:
+            codes = rng.integers(0, 2**32, (g, n, w), dtype=np.uint32)
+            qs = rng.integers(0, 2**32, (g, b, w), dtype=np.uint32)
+            dw, iw = hamming_topk_grouped(jnp.asarray(codes),
+                                          jnp.asarray(qs), l)
+            dg, ig = hamming_topk_grouped_sharded(
+                jnp.asarray(codes), jnp.asarray(qs), l, mesh, use_kernel=uk)
+            assert np.array_equal(np.asarray(dg), np.asarray(dw)), (g, n, l)
+            assert np.array_equal(np.asarray(ig), np.asarray(iw)), (g, n, l)
+            if l > n:   # sentinel tail intact after the offset/merge
+                assert (np.asarray(dg)[..., n:] == DIST_SENTINEL).all()
+                assert (np.asarray(ig)[..., n:] == -1).all()
+        # massive ties spanning every shard boundary: lowest global id wins
+        codes = np.zeros((2, 103, 2), np.uint32)
+        qs = rng.integers(0, 2**32, (2, 3, 2), dtype=np.uint32)
+        dw, iw = hamming_topk_grouped(jnp.asarray(codes), jnp.asarray(qs), 60)
+        dg, ig = hamming_topk_grouped_sharded(
+            jnp.asarray(codes), jnp.asarray(qs), 60, mesh, use_kernel=uk)
+        assert np.array_equal(np.asarray(ig), np.asarray(iw))
+        assert np.array_equal(np.asarray(dg), np.asarray(dw))
+        print("ok")
+    """, devices=shards)
+    assert "ok" in out
+
+
+def test_sharded_query_scan_batch():
+    """MultiTableIndex.query_scan_batch(mesh=) == the single-device scan,
+    before and after delete churn + auto-compaction, and through the
+    scan-mode service."""
+    out = _run("""
+        import jax, numpy as np
+        from repro.core.indexer import IndexConfig
+        from repro.data.synthetic import tiny1m_like
+        from repro.serving import HashQueryService, MultiTableIndex
+        corpus = tiny1m_like(n_labeled=700, n_unlabeled=0, d=32, classes=5,
+                             seed=0)
+        x = corpus.x[:597]                           # 597 rows: ragged shards
+        rng = np.random.default_rng(1)
+        ws = rng.normal(size=(8, x.shape[1])).astype(np.float32)
+        mesh = jax.make_mesh((4,), ("data",))
+        cfg = IndexConfig(method="bh", bits=18, tables=3)
+        mt = MultiTableIndex(cfg).fit(x)
+        a = mt.query_scan_batch(ws, l=16, topk=4)
+        b = mt.query_scan_batch(ws, l=16, topk=4, mesh=mesh)
+        assert np.array_equal(a.ids, b.ids)
+        assert np.array_equal(a.margins, b.margins)
+        assert np.array_equal(a.ids_topk, b.ids_topk)
+        assert np.array_equal(a.margins_topk, b.margins_topk)
+        for i in range(8):
+            assert np.array_equal(a.candidates[i], b.candidates[i])
+        # 50%+ delete churn triggers auto-compaction; sharded still matches
+        mt.delete(np.arange(299))                    # 299/597 > 0.5
+        assert mt.compactions == 1, mt.compactions
+        a = mt.query_scan_batch(ws, l=16)
+        b = mt.query_scan_batch(ws, l=16, mesh=mesh)
+        assert np.array_equal(a.ids, b.ids)
+        assert (a.ids >= 299).all()                  # stable ids survive
+        svc = HashQueryService(mt, max_batch=8, mode="scan", scan_l=16,
+                               mesh=mesh)
+        got = svc.query_batch(ws)
+        assert [r.index for r in got] == b.ids.tolist()
+        assert svc.stats()["requests"] == 8
+        print("ok")
+    """, devices=4)
+    assert "ok" in out
+
+
 def test_compressed_psum_error_feedback():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np

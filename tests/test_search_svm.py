@@ -20,6 +20,34 @@ def test_hamming_topk_matches_numpy(rng):
     assert sorted(np.asarray(d)) == sorted(ref[np.asarray(idx)])
 
 
+def test_hamming_topk_l_exceeds_n_parity(rng):
+    """All three jnp scans pad l > n tails to the kernel path's
+    (DIST_SENTINEL, -1) contract instead of crashing lax.top_k."""
+    from repro.core.search import (DIST_SENTINEL, hamming_topk_batch,
+                                   hamming_topk_grouped)
+    from repro.kernels import ops
+    n, b, w, l = 6, 3, 2, 11
+    codes = rng.integers(0, 2**32, (n, w), dtype=np.uint32)
+    qs = rng.integers(0, 2**32, (b, w), dtype=np.uint32)
+    d1, i1 = hamming_topk(jnp.asarray(codes), jnp.asarray(qs[0]), l)
+    db, ib = hamming_topk_batch(jnp.asarray(codes), jnp.asarray(qs), l)
+    dg, ig = hamming_topk_grouped(jnp.asarray(codes)[None],
+                                  jnp.asarray(qs)[None], l)
+    dk, ik = ops.hamming_topk_batch(jnp.asarray(codes), jnp.asarray(qs), l)
+    assert d1.shape == (l,) and db.shape == (b, l) and dg.shape == (1, b, l)
+    assert np.array_equal(np.asarray(db[0]), np.asarray(d1))
+    assert np.array_equal(np.asarray(ib[0]), np.asarray(i1))
+    assert np.array_equal(np.asarray(dg[0]), np.asarray(db))
+    assert np.array_equal(np.asarray(ig[0]), np.asarray(ib))
+    assert np.array_equal(np.asarray(dk), np.asarray(db))
+    assert np.array_equal(np.asarray(ik), np.asarray(ib))
+    assert (np.asarray(db)[:, n:] == DIST_SENTINEL).all()
+    assert (np.asarray(ib)[:, n:] == -1).all()
+    # the real slots still match the numpy oracle
+    ref = np.stack([np_hamming_packed(codes, q[None, :]) for q in qs])
+    assert np.array_equal(np.asarray(db)[:, :n], np.sort(ref, axis=1))
+
+
 def test_margin_rerank(rng):
     x = rng.normal(size=(100, 8)).astype(np.float32)
     w = rng.normal(size=(8,)).astype(np.float32)
@@ -60,6 +88,18 @@ def test_index_scan_finds_min_margin(rng):
     margins = np.abs(corpus.x @ w) / np.linalg.norm(w)
     rank = (margins < m - 1e-9).sum()
     assert rank <= 10   # scan top-64 then exact re-rank: near-optimal
+
+
+def test_index_query_scan_l_exceeds_n(rng):
+    """query_scan with l > n must drop the sentinel slots, not silently
+    re-rank id -1 (which would gather the last row's margin)."""
+    corpus = tiny1m_like(n_labeled=10, n_unlabeled=0, d=8, classes=2)
+    idx = HyperplaneIndex(IndexConfig(method="bh", bits=16)).fit(corpus.x)
+    w = rng.normal(size=corpus.x.shape[1]).astype(np.float32)
+    i, m = idx.query_scan(w, l=64)
+    margins = np.abs(corpus.x @ w) / np.linalg.norm(w)
+    assert i == int(np.argmin(margins))     # scan covers all 10 rows exactly
+    np.testing.assert_allclose(m, margins.min(), rtol=1e-5)
 
 
 def test_active_learning_end_to_end(rng):

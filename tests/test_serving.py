@@ -273,6 +273,115 @@ def test_scan_mask_and_service_mode(corpus, queries):
     assert st["requests"] == 16 and st["batches"] == 1 and st["qps"] > 0
 
 
+def test_empty_delete_is_noop_and_prefit_raises(corpus, queries):
+    mt = MultiTableIndex(_cfg(tables=2))
+    with pytest.raises(RuntimeError, match="before fit"):
+        mt.insert(corpus.x[:2])
+    with pytest.raises(RuntimeError, match="before fit"):
+        mt.delete([0])
+    with pytest.raises(RuntimeError, match="before fit"):
+        mt.query_scan_batch(queries[:2])
+    mt.fit(corpus.x[:200])
+    svc = HashQueryService(mt, max_batch=8, cache_size=64)
+    svc.query_batch(queries[:4])
+    v, before = mt.version, svc.cache_hits
+    mt.delete([])                                 # both empty spellings
+    mt.delete(np.empty((0,), dtype=np.int64))
+    assert mt.version == v                        # no version bump...
+    svc.query_batch(queries[:4])
+    assert svc.cache_hits - before == 4           # ...so the cache survives
+    state_before = mt._scan_state()[0]
+    mt.delete([])
+    assert mt._scan_state()[0] is state_before    # device scan state kept
+
+
+def test_compact_id_stability(corpus, queries):
+    """delete -> compact -> query: outstanding stable ids keep resolving,
+    and both backends answer exactly like a fresh index on the survivors
+    (with answers reported in stable-id space)."""
+    cfg = _cfg(tables=2, compact_threshold=None)   # manual compaction
+    mt = MultiTableIndex(cfg).fit(corpus.x)
+    mt.delete(np.arange(0, 2000, 2))
+    assert mt.stats()["dead_fraction"] == pytest.approx(0.5)
+    survivors = mt.compact()
+    assert np.array_equal(survivors, np.arange(1, 2000, 2))
+    st = mt.stats()
+    assert st["rows"] == 1000 and st["n"] == 1000 and mt.compactions == 1
+    assert mt.compact().size == 1000               # idempotent no-op
+    assert mt.version == st["version"]             # ...without a bump
+
+    fresh = MultiTableIndex(_cfg(tables=2)).fit(corpus.x[1::2])
+    got = mt.query_batch(queries)
+    want = fresh.query_batch(queries)
+    assert np.array_equal(got.ids, survivors[want.ids])
+    assert np.array_equal(got.margins, want.margins)
+    for b in range(queries.shape[0]):
+        assert np.array_equal(got.candidates[b],
+                              survivors[want.candidates[b]])
+    gs = mt.query_scan_batch(queries[:8], l=16, topk=4)
+    ws_ = fresh.query_scan_batch(queries[:8], l=16, topk=4)
+    assert np.array_equal(gs.ids, survivors[ws_.ids])
+    assert np.array_equal(gs.margins, ws_.margins)
+    ok = ws_.ids_topk >= 0
+    assert np.array_equal(gs.ids_topk[ok], survivors[ws_.ids_topk[ok]])
+    assert (gs.ids_topk[~ok] == -1).all()
+
+    # outstanding ids still resolve: delete by pre-compaction id works,
+    # deleted/compacted-away ids are clearly rejected
+    mt.delete(survivors[:10])
+    assert mt.n == 990
+    with pytest.raises(KeyError):
+        mt.delete([0])                             # compacted away
+    with pytest.raises(KeyError):
+        mt.delete(survivors[:1])                   # tombstoned (not compacted)
+    # masks are stable-id-indexed: restrict to the first 100 survivors
+    mask = np.zeros(2000, dtype=bool)
+    mask[survivors[100:200]] = True
+    res = mt.query_scan_batch(queries[:8], l=32, mask=mask)
+    assert mask[res.ids[res.ids >= 0]].all()
+
+
+def test_auto_compaction_threshold(corpus, queries):
+    mt = MultiTableIndex(_cfg(tables=2, compact_threshold=0.3)).fit(
+        corpus.x[:100])
+    mt.delete(np.arange(30))
+    assert mt.compactions == 0 and mt.stats()["rows"] == 100  # at, not past
+    mt.delete([30])
+    assert mt.compactions == 1 and mt.stats()["rows"] == 69
+    # fresh ids are assigned past the whole stable-id space, not per-row
+    new = mt.insert(corpus.x[:2])
+    assert list(new) == [100, 101]
+    res = mt.query_batch(queries[:4])
+    assert (res.ids >= 31).all()                   # stable ids reported
+    # insert -> delete -> compact roundtrip on the new ids
+    mt.delete(new)
+    assert mt.compactions == 1                     # 2/71 < 0.3: no trigger...
+    mt.compact()                                   # ...so compact manually
+    assert mt.compactions == 2 and mt.stats()["rows"] == 69
+
+
+def test_scan_after_50pct_churn_matches_fresh(corpus, queries):
+    """Acceptance: 50%-delete churn + auto-compaction, then query_scan_batch
+    answers match a freshly built index on the survivors, with stable ids."""
+    mt = MultiTableIndex(_cfg(tables=2)).fit(corpus.x)   # default threshold
+    victims = np.arange(0, 2000, 2)
+    mt.delete(victims)                       # exactly 0.5: not past threshold
+    assert mt.compactions == 0
+    mt.delete([1])                           # 1001/2000 > 0.5: auto-compacts
+    assert mt.compactions == 1
+    keep = np.setdiff1d(np.arange(2000), np.r_[victims, 1])
+    fresh = MultiTableIndex(_cfg(tables=2)).fit(corpus.x[keep])
+    got = mt.query_scan_batch(queries, l=16)
+    want = fresh.query_scan_batch(queries, l=16)
+    assert np.array_equal(got.ids, keep[want.ids])
+    assert np.array_equal(got.margins, want.margins)
+    for b in range(queries.shape[0]):
+        assert np.array_equal(got.candidates[b], keep[want.candidates[b]])
+    svc = HashQueryService(mt, mode="scan", scan_l=16)
+    assert [r.index for r in svc.query_batch(queries[:8])] \
+        == got.ids[:8].tolist()
+
+
 def test_index_stats(corpus):
     mt = MultiTableIndex(_cfg(tables=3)).fit(corpus.x)
     st = mt.stats()
