@@ -1,0 +1,129 @@
+"""CI perf-regression gate over the BENCH_serving.json trajectory.
+
+usage: python benchmarks/check_regression.py FRESH.json [BASELINE.json]
+
+Compares the benchmark record a CI run just produced against the committed
+trajectory and fails (exit 1) when a serving invariant from PR 2/3 has
+regressed.  Two kinds of gate:
+
+- **Deterministic** — the modeled HBM-traffic ratio comes from
+  ``kernels.ops.scan_traffic_model`` (pure arithmetic over the paper's
+  serving point n=1M, k=128, B=32), so it cannot flake: it must stay at or
+  above the PR-2 floor (4x) and within 10% of the committed baseline.
+- **Wall-clock, with headroom** — runner timing is noisy, so these floors
+  sit well below the committed values rather than tracking them: the
+  fused kernel must not be *slower* than the unfused scan at the batched
+  point (committed smoke ratio ~2.3x, floor 1.0x), and the single-query
+  fused serving path must keep >=0.8x the legacy per-table-loop QPS
+  (committed ~1.3x — the tightest gate; a ~35% adverse swing on a noisy
+  runner can trip it, in which case re-run the bench job before
+  suspecting the code).
+
+The gate also refuses a record with no ``serving_async`` sweep rows or
+with async shed/completion accounting that doesn't add up — the async
+front end's acceptance telemetry must keep flowing into the trajectory.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+MODEL_RATIO_FLOOR = 4.0      # PR-2: fused scan pays >=4x modeled HBM at B=32
+MODEL_BASELINE_SLACK = 0.9   # deterministic — allow 10% for config drift only
+KERNEL_QPS_RATIO_FLOOR = 1.0  # PR-2: fused no slower than unfused, batched
+B1_QPS_RATIO_FLOOR = 0.8     # PR-3: fused b=1 >=0.8x legacy per-table loop
+
+
+def _fail(failures: list[str], msg: str) -> None:
+    failures.append(msg)
+    print(f"FAIL: {msg}")
+
+
+def _ok(msg: str) -> None:
+    print(f"  ok: {msg}")
+
+
+def check(fresh: dict, baseline: dict | None) -> list[str]:
+    failures: list[str] = []
+
+    # -- modeled HBM-traffic ratio (deterministic) --------------------------
+    ratio = fresh["model_hbm_bytes"]["b32"]["ratio"]
+    if ratio < MODEL_RATIO_FLOOR:
+        _fail(failures, f"modeled B=32 HBM ratio {ratio:.2f}x < "
+                        f"{MODEL_RATIO_FLOOR}x floor")
+    else:
+        _ok(f"modeled B=32 HBM ratio {ratio:.2f}x >= {MODEL_RATIO_FLOOR}x")
+    if baseline is not None:
+        base = baseline["model_hbm_bytes"]["b32"]["ratio"]
+        if ratio < MODEL_BASELINE_SLACK * base:
+            _fail(failures, f"modeled ratio {ratio:.2f}x fell below "
+                            f"{MODEL_BASELINE_SLACK:.0%} of committed "
+                            f"{base:.2f}x")
+        else:
+            _ok(f"modeled ratio within {MODEL_BASELINE_SLACK:.0%} of "
+                f"committed {base:.2f}x")
+
+    # -- fused-vs-unfused kernel QPS at the batched point -------------------
+    batched = [k for k in fresh["kernel_ms"] if k != "b1"]
+    if not batched:
+        _fail(failures, "no batched kernel_ms row in fresh record")
+    else:
+        row = fresh["kernel_ms"][batched[0]]
+        qps_ratio = row["unfused_ms"] / row["fused_ms"]
+        if qps_ratio < KERNEL_QPS_RATIO_FLOOR:
+            _fail(failures, f"batched fused-vs-unfused QPS ratio "
+                            f"{qps_ratio:.2f}x < {KERNEL_QPS_RATIO_FLOOR}x "
+                            f"floor ({batched[0]})")
+        else:
+            _ok(f"batched fused-vs-unfused QPS ratio {qps_ratio:.2f}x "
+                f"({batched[0]})")
+
+    # -- single-query serving path vs the legacy per-table loop -------------
+    s = fresh["serving"]
+    b1_ratio = s["qps_b1"] / s["qps_b1_legacy"]
+    if b1_ratio < B1_QPS_RATIO_FLOOR:
+        _fail(failures, f"b=1 fused serving QPS {b1_ratio:.2f}x of legacy "
+                        f"< {B1_QPS_RATIO_FLOOR}x floor")
+    else:
+        _ok(f"b=1 fused serving QPS {b1_ratio:.2f}x of legacy")
+
+    # -- async sweep rows present and internally consistent -----------------
+    async_rec = fresh.get("serving_async")
+    if not async_rec or not async_rec.get("rows"):
+        _fail(failures, "no serving_async sweep rows in fresh record")
+    else:
+        rows = async_rec["rows"]
+        bad = [r for r in rows
+               if r["completed"] + r["shed"] != r["offered"]
+               or (r["completed"] > 0) != (r["qps"] > 0)]
+        if bad:
+            _fail(failures, f"{len(bad)} async rows with inconsistent "
+                            f"offered/completed/shed accounting")
+        else:
+            _ok(f"{len(rows)} async sweep rows, accounting consistent")
+
+    return failures
+
+
+def main(argv: list[str]) -> int:
+    if not 2 <= len(argv) <= 3:
+        print(__doc__)
+        return 2
+    with open(argv[1]) as f:
+        fresh = json.load(f)
+    baseline = None
+    if len(argv) == 3:
+        with open(argv[2]) as f:
+            baseline = json.load(f)
+    print(f"perf-regression gate: {argv[1]} vs "
+          f"{argv[2] if baseline else '(floors only)'}")
+    failures = check(fresh, baseline)
+    if failures:
+        print(f"{len(failures)} perf regression(s); see FAIL lines above")
+        return 1
+    print("perf-regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -1,0 +1,188 @@
+"""Open-loop Poisson load on the async deadline-flush serving front end.
+
+Closed-loop benchmarks (issue a batch, wait, repeat) measure single-pass
+cost; the serving question the paper's active-learning setting actually
+poses is *throughput at fixed latency under concurrent arrivals*.  This
+generator is open-loop: request arrival times are drawn up front from a
+Poisson process (exponential gaps at ``rate_hz``) and submissions happen
+at those wall-clock times whether or not earlier requests have finished —
+so queueing delay shows up in the latency percentiles instead of silently
+throttling the load, and past ``max_queue`` the service sheds explicitly
+(the shed rate is a first-class column).
+
+The sweep crosses arrival rate x flush deadline for each backend and
+appends the rows to ``BENCH_serving.json`` (under ``"serving_async"``,
+merged into the record ``serving_scan.py`` wrote earlier in the same run)
+so the trajectory accumulates across PRs.  Before measuring, a fixed
+request set is answered both async and sync and compared bit-for-bit —
+the benchmark refuses to report numbers for a front end that changes
+answers.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.indexer import IndexConfig
+from repro.data.synthetic import tiny1m_like
+from repro.serving import (AsyncHashQueryService, HashQueryService,
+                           MultiTableIndex, QueueFullError)
+from repro.utils.trajectory import merge_into_json
+
+
+def drive(service: AsyncHashQueryService, ws_pool: np.ndarray, rate_hz: float,
+          n_requests: int, seed: int = 0) -> dict:
+    """Offer ``n_requests`` at Poisson arrival times; block until every
+    admitted request completes.  Returns the load-side row (the service's
+    own counters are merged in by the caller)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, n_requests))
+    futures = []
+    shed = 0
+    t0 = time.perf_counter()
+    for i in range(n_requests):
+        dt = t0 + arrivals[i] - time.perf_counter()
+        if dt > 0:
+            time.sleep(dt)
+        try:
+            futures.append(service.submit(ws_pool[i % len(ws_pool)]))
+        except QueueFullError:
+            shed += 1
+    for f in futures:
+        f.result()
+    elapsed = time.perf_counter() - t0
+    return {
+        "offered": n_requests,
+        "completed": len(futures),
+        "shed": shed,
+        "shed_rate": shed / n_requests,
+        "qps": len(futures) / elapsed,
+        "elapsed_s": elapsed,
+    }
+
+
+def _parity_gate(index: MultiTableIndex, ws: np.ndarray, mode: str,
+                 max_batch: int) -> None:
+    """Async answers must be bit-identical to the synchronous batch."""
+    sync = HashQueryService(index, max_batch=max_batch, mode=mode)
+    ref = sync.query_batch(ws)
+    svc = AsyncHashQueryService(index, max_batch=max_batch, deadline_ms=1.0,
+                                mode=mode)
+    futs = [svc.submit(w) for w in ws]
+    got = [f.result(timeout=120) for f in futs]
+    svc.close()
+    for g, r in zip(got, ref):
+        if not (g.index == r.index and g.margin == r.margin
+                and g.nonempty == r.nonempty
+                and np.array_equal(g.candidates, r.candidates)):
+            raise SystemExit(
+                f"async {mode} answers diverged from sync query_batch")
+
+
+def _merge_json(json_path: str, record: dict) -> None:
+    """Fold the async record into the trajectory file serving_scan wrote
+    (or start a fresh file when run standalone)."""
+    merge_into_json(json_path, {"serving_async": record})
+    print(f"# merged serving_async into {json_path}")
+
+
+def _calibrate(index: MultiTableIndex, mode: str, max_batch: int,
+               ws: np.ndarray, repeat: int = 3) -> float:
+    """Warm the jit caches and measure the backend's saturated batch
+    throughput (QPS at back-to-back full batches).  The sweep expresses
+    arrival rates as fractions of this, so the same under-load and
+    over-load regimes are exercised whatever machine CI lands on.
+
+    Warmup covers every power-of-two batch bucket the async service can
+    flush (deadline flushes are ragged; the service pads them to these
+    buckets) — otherwise first-compile stalls, not serving behaviour,
+    dominate the measured percentiles."""
+    sync = HashQueryService(index, max_batch=max_batch, cache_size=0,
+                            mode=mode)
+    b = 1
+    while b < max_batch:
+        sync.query_batch(ws[:b])
+        b *= 2
+    sync.query_batch(ws)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        sync.query_batch(ws)
+    return repeat * max_batch / (time.perf_counter() - t0)
+
+
+def run(json_path: str | None = None, n: int = 20000, d: int = 64,
+        bits: int = 18, tables: int = 4, max_batch: int = 32,
+        rate_rels=(0.25, 0.5, 1.0, 2.0), deadlines_ms=(1.0, 5.0, 20.0),
+        backends=("probe", "scan"), duration_s: float = 2.0,
+        max_requests: int = 2000, smoke: bool = False) -> dict:
+    if smoke:
+        n, tables, duration_s, max_requests = 4000, 2, 1.0, 600
+        rate_rels, deadlines_ms = (0.5, 2.0), (2.0, 20.0)
+        backends = ("probe", "scan")
+    # queue bound: ~4 batches of headroom, so genuine overload (rate above
+    # capacity for longer than the queue absorbs) sheds instead of letting
+    # the tail latency grow without bound
+    max_queue = 4 * max_batch
+    corpus = tiny1m_like(n_labeled=n, n_unlabeled=0, d=d, classes=10)
+    rng = np.random.default_rng(0)
+    ws_pool = rng.normal(size=(max(64, max_batch),
+                               corpus.x.shape[1])).astype(np.float32)
+    cfg = IndexConfig(method="bh", bits=bits, tables=tables, batch=max_batch)
+    index = MultiTableIndex(cfg).fit(corpus.x)
+
+    rows = []
+    print("backend,rate_rel,rate_hz,deadline_ms,qps,p50_ms,p95_ms,p99_ms,"
+          "shed_rate,mean_batch")
+    for mode in backends:
+        _parity_gate(index, ws_pool[:max_batch], mode, max_batch)
+        capacity = _calibrate(index, mode, max_batch, ws_pool[:max_batch])
+        for rel in rate_rels:
+            rate = rel * capacity
+            n_requests = max(40, min(max_requests,
+                                     int(round(duration_s * rate))))
+            for dl in deadlines_ms:
+                # cache off, matching the calibration service — otherwise
+                # the 64-query pool turns every probe lookup into a cache
+                # hit and rate_rel stops mapping to under/over-load
+                svc = AsyncHashQueryService(
+                    index, max_batch=max_batch, deadline_ms=dl,
+                    max_queue=max_queue, mode=mode, cache_size=0)
+                load = drive(svc, ws_pool, rate, n_requests,
+                             seed=int(rel * 1000 + dl))
+                svc.close()
+                st = svc.stats()
+                row = {
+                    "backend": mode,
+                    "rate_rel": rel,
+                    "rate_hz": rate,
+                    "capacity_qps": capacity,
+                    "deadline_ms": dl,
+                    **load,
+                    "latency_ms": st["latency_ms"],
+                    "mean_batch": st["mean_batch"],
+                    "flushes": st["flushes"],
+                    "batch_size_hist": st["batch_size_hist"],
+                }
+                rows.append(row)
+                lat = st["latency_ms"]
+                print(f"{mode},{rel:.2f},{rate:.0f},{dl:.0f},"
+                      f"{load['qps']:.0f},{lat['p50']:.2f},{lat['p95']:.2f},"
+                      f"{lat['p99']:.2f},{load['shed_rate']:.3f},"
+                      f"{st['mean_batch']:.1f}")
+
+    record = {
+        "config": {"n": n, "d": d, "bits": bits, "tables": tables,
+                   "max_batch": max_batch, "max_queue": max_queue,
+                   "duration_s": duration_s, "smoke": smoke},
+        "rows": rows,
+    }
+    if json_path:
+        _merge_json(json_path, record)
+    return record
+
+
+if __name__ == "__main__":
+    import sys
+    paths = [a for a in sys.argv[1:] if not a.startswith("--")]
+    run(json_path=paths[0] if paths else None, smoke="--smoke" in sys.argv)

@@ -3,7 +3,12 @@
 # dynamic insert/delete; batch_query vectorizes hashing, multi-probe key
 # generation and the margin re-rank over whole batches; HashQueryService
 # fronts it all with micro-batching, a query-code LRU cache and QPS/latency
-# counters.
+# counters.  AsyncHashQueryService adds the concurrent-caller story:
+# future-per-request submit, deadline-based batch coalescing, and bounded-
+# queue admission control.
+from repro.serving.async_service import (AsyncHashQueryService,
+                                         DeadlineBatcher, QueueFullError,
+                                         ServiceClosedError)
 from repro.serving.batch_query import (batched_rerank, hash_database_all,
                                        hash_queries_all, pad_candidates)
 from repro.serving.multi_table import BatchQueryResult, MultiTableIndex

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core.indexer import IndexConfig
 from repro.data.synthetic import Corpus
+from repro.serving.async_service import AsyncHashQueryService
 from repro.serving.multi_table import MultiTableIndex
 from repro.serving.service import HashQueryService
 from repro.svm.linear_svm import average_precision, train_ova
@@ -107,20 +108,40 @@ class HashSelector:
     All C per-iteration hyperplane queries go through the service as one
     micro-batch; an empty (post-mask) lookup falls back to random selection
     exactly as the paper prescribes (§5.2).
+
+    With ``use_async`` each learner submits its own query to an
+    AsyncHashQueryService (future per class — the paper's C concurrent
+    learners, each unaware of the others) and the deadline-flush loop
+    coalesces them into shared device launches; ``flush()`` after the
+    submit burst bounds the last learner's wait.  Answers are bit-identical
+    to the synchronous batch.
     """
 
-    def __init__(self, index_config: IndexConfig, seed: int = 0):
+    def __init__(self, index_config: IndexConfig, seed: int = 0,
+                 use_async: bool = False, deadline_ms: float = 2.0):
         self.config = index_config
         self.name = index_config.method
         self.rng = np.random.default_rng(seed)
+        self.use_async = use_async
+        self.deadline_ms = deadline_ms
         self.index: MultiTableIndex | None = None
-        self.service: HashQueryService | None = None
+        self.service: HashQueryService | AsyncHashQueryService | None = None
 
     def prepare(self, corpus: Corpus):
         self.index = MultiTableIndex(self.config).fit(corpus.x)
-        self.service = HashQueryService(self.index,
-                                        max_batch=self.config.batch)
+        if self.use_async:
+            self.service = AsyncHashQueryService(
+                self.index, max_batch=self.config.batch,
+                deadline_ms=self.deadline_ms)
+        else:
+            self.service = HashQueryService(self.index,
+                                            max_batch=self.config.batch)
         return self
+
+    def finish(self) -> None:
+        """Release the flush thread (async mode); sync mode is a no-op."""
+        if isinstance(self.service, AsyncHashQueryService):
+            self.service.close()
 
     def select(self, c: int, w, unlabeled: np.ndarray):
         picks, oks = self.select_batch(
@@ -128,7 +149,15 @@ class HashSelector:
         return picks[0], oks[0]
 
     def select_batch(self, w_all: np.ndarray, unlabeled: np.ndarray):
-        results = self.service.query_batch(w_all, mask=unlabeled)
+        if isinstance(self.service, AsyncHashQueryService):
+            # each class = one independent learner submitting its own query;
+            # the service coalesces the burst into shared launches
+            futures = [self.service.submit(w_all[c], mask=unlabeled)
+                       for c in range(w_all.shape[0])]
+            self.service.flush()
+            results = [f.result() for f in futures]
+        else:
+            results = self.service.query_batch(w_all, mask=unlabeled)
         picks, oks = [], []
         for res in results:
             if res.nonempty:
@@ -141,6 +170,7 @@ class HashSelector:
 
 
 def make_selector(method: str, *, bits: int, radius: int, seed: int = 0,
+                  use_async: bool = False, deadline_ms: float = 2.0,
                   **index_kw):
     if method == "random":
         return RandomSelector(seed)
@@ -150,7 +180,8 @@ def make_selector(method: str, *, bits: int, radius: int, seed: int = 0,
     eff_bits = 2 * bits if method == "ah" else bits
     cfg = IndexConfig(method=method, bits=eff_bits, radius=radius, seed=seed,
                       **index_kw)
-    return HashSelector(cfg, seed)
+    return HashSelector(cfg, seed, use_async=use_async,
+                        deadline_ms=deadline_ms)
 
 
 # ---------------------------------------------------------------------------
@@ -203,39 +234,43 @@ def run_active_learning(corpus: Corpus, selector, config: ALConfig) -> ALResult:
         map_curve.append(float(mean_ap(w_all, jnp.asarray(labeled))))
 
     record_eval(0)
-    for it in range(1, config.iterations + 1):
-        w_np = np.asarray(w_all)
-        nw = norms_w(w_np)
-        unlabeled = ~labeled
+    try:
+        for it in range(1, config.iterations + 1):
+            w_np = np.asarray(w_all)
+            nw = norms_w(w_np)
+            unlabeled = ~labeled
 
-        t0 = time.perf_counter()
-        if hasattr(selector, "select_batch"):
-            # all C hyperplane queries answered as one micro-batch
-            picks, oks = selector.select_batch(w_np, unlabeled)
-            nonempty += np.asarray(oks, dtype=np.int64)
-        else:
-            picks = []
-            for c in range(c_num):
-                idx, ok = selector.select(c, w_np[c], unlabeled)
-                picks.append(idx)
-                nonempty[c] += int(ok)
-        select_s += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            if hasattr(selector, "select_batch"):
+                # all C hyperplane queries answered as one micro-batch
+                picks, oks = selector.select_batch(w_np, unlabeled)
+                nonempty += np.asarray(oks, dtype=np.int64)
+            else:
+                picks = []
+                for c in range(c_num):
+                    idx, ok = selector.select(c, w_np[c], unlabeled)
+                    picks.append(idx)
+                    nonempty[c] += int(ok)
+            select_s += time.perf_counter() - t0
 
-        # metrics: achieved vs optimal margin this round
-        opt = exhaustive.select_all(w_all, unlabeled)
-        sel_m = [abs(float(x_np[i] @ w_np[c])) / nw[c]
-                 for c, i in enumerate(picks)]
-        opt_m = [abs(float(x_np[i] @ w_np[c])) / nw[c]
-                 for c, i in enumerate(opt)]
-        min_margins.append(float(np.mean(sel_m)))
-        exh_margins.append(float(np.mean(opt_m)))
+            # metrics: achieved vs optimal margin this round
+            opt = exhaustive.select_all(w_all, unlabeled)
+            sel_m = [abs(float(x_np[i] @ w_np[c])) / nw[c]
+                     for c, i in enumerate(picks)]
+            opt_m = [abs(float(x_np[i] @ w_np[c])) / nw[c]
+                     for c, i in enumerate(opt)]
+            min_margins.append(float(np.mean(sel_m)))
+            exh_margins.append(float(np.mean(opt_m)))
 
-        labeled[np.asarray(picks)] = True
-        w_all = train_ova(w_all, x, labels, jnp.asarray(labeled), c_num,
-                          l2=config.svm_l2, steps=config.svm_steps,
-                          lr=config.svm_lr)
-        if it % config.eval_every == 0 or it == config.iterations:
-            record_eval(it)
+            labeled[np.asarray(picks)] = True
+            w_all = train_ova(w_all, x, labels, jnp.asarray(labeled), c_num,
+                              l2=config.svm_l2, steps=config.svm_steps,
+                              lr=config.svm_lr)
+            if it % config.eval_every == 0 or it == config.iterations:
+                record_eval(it)
+    finally:
+        if hasattr(selector, "finish"):
+            selector.finish()       # async selectors release their thread
 
     return ALResult(
         name=selector.name,

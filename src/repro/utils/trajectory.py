@@ -1,0 +1,31 @@
+"""Benchmark-trajectory JSON helpers.
+
+The serving benchmarks accumulate their records in one JSON file
+(``BENCH_serving.json``) across scripts and PRs: each script merges its
+top-level keys into whatever is already there instead of overwriting, so
+the fused-scan record and the async Poisson sweep coexist whatever order
+they run in.  A corrupt or half-written file (e.g. an interrupted earlier
+run) is treated as empty rather than aborting the whole benchmark run.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def merge_into_json(path: str, updates: dict) -> dict:
+    """Update ``path`` in place with ``updates`` (top-level keys); returns
+    the merged record.  Missing or unreadable files start fresh."""
+    data: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            data = {}
+        if not isinstance(data, dict):
+            data = {}
+    data.update(updates)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+    return data
