@@ -10,18 +10,32 @@ regressed.  Two kinds of gate:
   ``kernels.ops.scan_traffic_model`` (pure arithmetic over the paper's
   serving point n=1M, k=128, B=32), so it cannot flake: it must stay at or
   above the PR-2 floor (4x) and within 10% of the committed baseline.
+  Equally deterministic: the modeled selection-cost ratio
+  (``kernels.ops.scan_select_model``) of the PR-5 histogram select over
+  the legacy argmin select must stay >= 8x at l=128 — the arithmetic
+  reason deep scans are viable.
 - **Wall-clock, with headroom** — runner timing is noisy, so these floors
   sit well below the committed values rather than tracking them: the
   fused kernel must not be *slower* than the unfused scan at the batched
-  point (committed smoke ratio ~2.3x, floor 1.0x), and the single-query
-  fused serving path must keep >=0.8x the legacy per-table-loop QPS
-  (committed ~1.3x — the tightest gate; a ~35% adverse swing on a noisy
+  point (committed smoke ratio ~2.3x, floor 1.0x); the B=1 fused kernel
+  must keep >=0.9x the unfused QPS (PR-5: the histogram select erased the
+  b1 fused regression — committed ~1.3x — and this floor keeps it erased);
+  the batched l=128 histogram select must not be slower than the argmin
+  select it replaced (committed ~4-28x); and the single-query fused
+  serving path must keep >=0.8x the legacy per-table-loop QPS (committed
+  ~1.3x — the tightest wall-clock gate; a ~35% adverse swing on a noisy
   runner can trip it, in which case re-run the bench job before
   suspecting the code).
+- **Recall** — the deep-scan recall@20 gauge (measured at recall_l=512,
+  where it reads ~1.0) must stay >= 0.5.  Recall is data-seeded, not
+  timed, so this is noise-free on a fixed software stack; the shallow-l
+  recall that used to read 0.0 by chance is kept in the record but not
+  gated.
 
-The gate also refuses a record with no ``serving_async`` sweep rows or
-with async shed/completion accounting that doesn't add up — the async
-front end's acceptance telemetry must keep flowing into the trajectory.
+The gate also refuses a record with no ``serving_async`` sweep rows (or
+inconsistent shed/completion accounting) and one with no ``kernel_sweep``
+rows — the selection-sweep telemetry must keep flowing into the
+trajectory.
 """
 from __future__ import annotations
 
@@ -32,6 +46,10 @@ MODEL_RATIO_FLOOR = 4.0      # PR-2: fused scan pays >=4x modeled HBM at B=32
 MODEL_BASELINE_SLACK = 0.9   # deterministic — allow 10% for config drift only
 KERNEL_QPS_RATIO_FLOOR = 1.0  # PR-2: fused no slower than unfused, batched
 B1_QPS_RATIO_FLOOR = 0.8     # PR-3: fused b=1 >=0.8x legacy per-table loop
+B1_KERNEL_RATIO_FLOOR = 0.9  # PR-5: b=1 fused kernel >=0.9x unfused QPS
+SELECT_MODEL_FLOOR = 8.0     # PR-5: modeled hist select >=8x cheaper, l=128
+SWEEP_L128_FLOOR = 1.0       # PR-5: hist no slower than argmin at l=128
+RECALL_FLOOR = 0.5           # PR-5: deep-scan recall@20 gauge (reads ~1.0)
 
 
 def _fail(failures: list[str], msg: str) -> None:
@@ -63,6 +81,17 @@ def check(fresh: dict, baseline: dict | None) -> list[str]:
             _ok(f"modeled ratio within {MODEL_BASELINE_SLACK:.0%} of "
                 f"committed {base:.2f}x")
 
+    # -- modeled selection cost: hist must stay >=8x cheaper at l=128 -------
+    sel = fresh.get("model_select_ops", {}).get("l128")
+    if sel is None:
+        _fail(failures, "no model_select_ops l128 row in fresh record")
+    elif sel["ratio"] < SELECT_MODEL_FLOOR:
+        _fail(failures, f"modeled l=128 select-cost ratio "
+                        f"{sel['ratio']:.1f}x < {SELECT_MODEL_FLOOR}x floor")
+    else:
+        _ok(f"modeled l=128 select-cost ratio {sel['ratio']:.1f}x "
+            f">= {SELECT_MODEL_FLOOR}x")
+
     # -- fused-vs-unfused kernel QPS at the batched point -------------------
     batched = [k for k in fresh["kernel_ms"] if k != "b1"]
     if not batched:
@@ -77,6 +106,51 @@ def check(fresh: dict, baseline: dict | None) -> list[str]:
         else:
             _ok(f"batched fused-vs-unfused QPS ratio {qps_ratio:.2f}x "
                 f"({batched[0]})")
+
+    # -- b=1 fused kernel: the PR-5 histogram select erased the regression --
+    b1 = fresh["kernel_ms"].get("b1")
+    if b1 is None:
+        _fail(failures, "no b1 kernel_ms row in fresh record")
+    else:
+        b1_ratio = b1["unfused_ms"] / b1["fused_ms"]
+        if b1_ratio < B1_KERNEL_RATIO_FLOOR:
+            _fail(failures, f"b=1 fused-vs-unfused kernel QPS ratio "
+                            f"{b1_ratio:.2f}x < {B1_KERNEL_RATIO_FLOOR}x "
+                            f"floor (the pre-histogram-select regression "
+                            f"is back)")
+        else:
+            _ok(f"b=1 fused-vs-unfused kernel QPS ratio {b1_ratio:.2f}x")
+
+    # -- selection sweep: hist vs argmin at the deep batched point ----------
+    sweep = fresh.get("kernel_sweep") or []
+    deep = [r for r in sweep if r["l"] == 128 and r["b"] > 1]
+    if not deep:
+        _fail(failures, "no batched l=128 kernel_sweep row in fresh record")
+    else:
+        r = deep[0]
+        sw_ratio = r["argmin_ms"] / r["hist_ms"]
+        if sw_ratio < SWEEP_L128_FLOOR:
+            _fail(failures, f"l=128 hist-vs-argmin QPS ratio "
+                            f"{sw_ratio:.2f}x < {SWEEP_L128_FLOOR}x floor "
+                            f"(b={r['b']})")
+        else:
+            _ok(f"l=128 hist-vs-argmin QPS ratio {sw_ratio:.2f}x "
+                f"(b={r['b']})")
+
+    # -- deep-scan recall gauge (data-seeded, not timed) --------------------
+    recall_keys = [k for k in fresh["serving"]
+                   if k.startswith("recall_at") and not
+                   k.endswith("_shallow")]
+    if not recall_keys:
+        _fail(failures, "no recall gauge in fresh serving record")
+    else:
+        rec = fresh["serving"][recall_keys[0]]
+        if rec < RECALL_FLOOR:
+            _fail(failures, f"deep-scan {recall_keys[0]} {rec:.2f} < "
+                            f"{RECALL_FLOOR} floor (gauge dead or scan "
+                            f"broken)")
+        else:
+            _ok(f"deep-scan {recall_keys[0]} {rec:.2f} >= {RECALL_FLOOR}")
 
     # -- single-query serving path vs the legacy per-table loop -------------
     s = fresh["serving"]

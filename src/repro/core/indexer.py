@@ -45,6 +45,12 @@ class IndexConfig:
     # the REPRO_USE_KERNELS env var (CI's fallback leg sets it to 0)
     use_kernels: bool = dataclasses.field(
         default_factory=lambda: env_use_kernels(False))
+    # fused-scan selection algorithm: "hist" (counting-sort select, cheap
+    # at any scan depth l) or "argmin" (legacy l-round masked argmin — the
+    # escape hatch).  None honours the REPRO_FUSED_SELECT env var (default
+    # hist).  Bit-identical results either way; deep scans (l in the
+    # hundreds, for recall) are only cheap under "hist".
+    fused_select: str | None = None
 
 
 @dataclasses.dataclass

@@ -37,6 +37,25 @@ def env_use_kernels(default: bool) -> bool:
     return env.strip().lower() not in ("0", "false", "no", "off")
 
 
+def env_fused_select(select: str | None = None) -> str:
+    """Resolve the fused-scan selection algorithm: ``"hist"`` (the default,
+    two-pass counting-sort/histogram select — O(block_n·B) tile passes
+    independent of l) or ``"argmin"`` (the legacy l-round masked-argmin
+    kernel / lax.top_k fallback — the escape hatch if the histogram path
+    misbehaves on some backend).  Explicit arguments win; otherwise the
+    ``REPRO_FUSED_SELECT`` env var moves the default (CI runs a leg with
+    it set to ``argmin`` so the fallback stays exercised).  Both produce
+    bit-identical results on every scan path — this knob only trades
+    selection cost."""
+    if select is not None:
+        if select not in ("hist", "argmin"):
+            raise ValueError(f"fused_select must be 'hist' or 'argmin', "
+                             f"got {select!r}")
+        return select
+    env = os.environ.get("REPRO_FUSED_SELECT", "").strip().lower()
+    return env if env in ("hist", "argmin") else "hist"
+
+
 def _pad_topk(dists, ids, l: int):
     """Pad the trailing top-k axis out to l slots with the impossible-slot
     contract shared by every scan path: (DIST_SENTINEL, id -1)."""
@@ -84,8 +103,7 @@ def hamming_topk_batch(codes, queries, l: int):
     return _pad_topk(-neg, idx, l)
 
 
-@partial(jax.jit, static_argnames=("l",))
-def hamming_topk_grouped(codes, queries, l: int):
+def hamming_topk_grouped(codes, queries, l: int, select: str | None = None):
     """Grouped scan, pure-jnp: group g's queries vs group g's codes only.
 
     Same contract as kernels.ops.hamming_topk_grouped (the Pallas fused
@@ -93,20 +111,78 @@ def hamming_topk_grouped(codes, queries, l: int):
     ids (G, B, l)) sorted ascending by (distance, id); when l > n the tail
     columns carry (DIST_SENTINEL, -1).  One XLA dispatch regardless of G —
     the multi-table scan folds its L tables into G.
+
+    select: ``"hist"`` (default, env-overridable via REPRO_FUSED_SELECT)
+    routes through the counting-sort reference ``hamming_topk_grouped_hist``;
+    ``"argmin"`` keeps the legacy lax.top_k selection.  Bit-identical.
     """
+    if env_fused_select(select) == "hist":
+        return hamming_topk_grouped_hist(codes, queries, l)
+    return _grouped_topk_lax(codes, queries, l)
+
+
+@partial(jax.jit, static_argnames=("l",))
+def _grouped_topk_lax(codes, queries, l: int):
+    """Legacy grouped selection: full distance matrix + lax.top_k."""
     g, n, w = codes.shape
     d = hamming_packed(codes[:, None, :, :], queries[:, :, None, :])  # G,B,n
     neg, idx = jax.lax.top_k(-d, min(l, n))
     return _pad_topk(-neg, idx, l)
 
 
+@partial(jax.jit, static_argnames=("l",))
+def hamming_topk_grouped_hist(codes, queries, l: int):
+    """Pure-jnp reference of the two-pass histogram (counting-sort) select
+    the Pallas kernel ``hamming_topk_hist_kernel`` runs per block — here
+    over the whole row axis at once.  Bit-identical to the lax.top_k path
+    (ties to the lowest id, l > n tails = (DIST_SENTINEL, -1)).
+
+    Pass 1 bisects the distance CDF (count(d <= mid), one compare-reduce
+    per probe over the ≤ 32·W+1 possible values) to the per-query cutoff
+    radius r.  Pass 2 keeps rows with d < r plus the lowest-index ties at
+    r, scatters them into their cumsum-assigned slots, and lex-sorts only
+    those min(l, n) survivors by (distance, id) — the sort shrinks from n
+    rows to l.  This is the selection the ``REPRO_USE_KERNELS=0`` leg
+    serves with, so the counting-sort logic is exercised on both CI legs.
+    """
+    g, n, w = codes.shape
+    b = queries.shape[1]
+    d = hamming_packed(codes[:, None, :, :], queries[:, :, None, :])  # G,B,n
+    t = min(l, n)
+    max_dist = 32 * w
+    lo = jnp.zeros((g, b, 1), jnp.int32)
+    hi = jnp.full((g, b, 1), max_dist, jnp.int32)
+    for _ in range(max(1, max_dist.bit_length())):
+        mid = (lo + hi) >> 1
+        cnt = jnp.sum((d <= mid).astype(jnp.int32), axis=2, keepdims=True)
+        ge = cnt >= t
+        hi = jnp.where(ge, mid, hi)
+        lo = jnp.where(ge, lo, mid + 1)
+    r = hi
+    less = jnp.sum((d < r).astype(jnp.int32), axis=2, keepdims=True)
+    tie = d == r
+    tie_rank = jnp.cumsum(tie.astype(jnp.int32), axis=2) - 1
+    keep = (d < r) | (tie & (tie_rank < (t - less)))
+    # slot in [0, t) for kept rows (row order), t = dropped (scatter no-op)
+    slot = jnp.where(keep, jnp.cumsum(keep.astype(jnp.int32), axis=2) - 1, t)
+    gi = jnp.arange(g)[:, None, None]
+    bi = jnp.arange(b)[None, :, None]
+    ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), d.shape)
+    out_d = jnp.full((g, b, t + 1), jnp.int32(DIST_SENTINEL))
+    out_i = jnp.full((g, b, t + 1), jnp.int32(-1))
+    out_d = out_d.at[gi, bi, slot].set(d, mode="drop")[..., :t]
+    out_i = out_i.at[gi, bi, slot].set(ids, mode="drop")[..., :t]
+    out_d, out_i = jax.lax.sort((out_d, out_i), dimension=2, num_keys=2)
+    return _pad_topk(out_d, out_i, l)
+
+
 def _local_then_merge(codes_shard, query, l: int, axis: str,
-                      use_kernel: bool):
+                      use_kernel: bool, select: str):
     if use_kernel:
         # fused Pallas scan+select: the shard's distance vector stays in
         # VMEM; only l (distance, id) pairs reach HBM before the gather.
         from repro.kernels import ops
-        cand_d, idx = ops.hamming_topk(codes_shard, query, l)
+        cand_d, idx = ops.hamming_topk(codes_shard, query, l, select=select)
     else:
         d = hamming_packed(codes_shard, query[None, :])
         neg, idx = jax.lax.top_k(-d, min(l, d.shape[0]))
@@ -122,7 +198,8 @@ def _local_then_merge(codes_shard, query, l: int, axis: str,
 
 
 def hamming_topk_sharded(codes, query, l: int, mesh, axis: str = "data",
-                         use_kernel: bool | None = None):
+                         use_kernel: bool | None = None,
+                         select: str | None = None):
     """Distributed top-l Hamming scan over a row-sharded code table.
 
     codes must be shardable by `axis` on dim 0.  Returns replicated
@@ -135,16 +212,18 @@ def hamming_topk_sharded(codes, query, l: int, mesh, axis: str = "data",
     """
     if use_kernel is None:
         use_kernel = env_use_kernels(True)
-    return _sharded_fn(mesh, axis, l, use_kernel)(codes, query)
+    select = env_fused_select(select)
+    return _sharded_fn(mesh, axis, l, use_kernel, select)(codes, query)
 
 
 @lru_cache(maxsize=256)
-def _sharded_fn(mesh, axis: str, l: int, use_kernel: bool):
+def _sharded_fn(mesh, axis: str, l: int, use_kernel: bool, select: str):
     """Jitted shard_map closure for hamming_topk_sharded, cached per
-    (mesh, axis, l, use_kernel) so steady serving traffic doesn't rebuild
-    and re-trace the distributed scan on every call."""
+    (mesh, axis, l, use_kernel, select) so steady serving traffic doesn't
+    rebuild and re-trace the distributed scan on every call."""
     return jax.jit(shard_map_compat(
-        partial(_local_then_merge, l=l, axis=axis, use_kernel=use_kernel),
+        partial(_local_then_merge, l=l, axis=axis, use_kernel=use_kernel,
+                select=select),
         mesh=mesh,
         in_specs=(P(axis, None), P()),
         out_specs=(P(), P()),
@@ -152,7 +231,8 @@ def _sharded_fn(mesh, axis: str, l: int, use_kernel: bool):
 
 
 def _grouped_local_then_merge(codes_shard, queries, l: int, l_local: int,
-                              n_valid: int, axis: str, use_kernel: bool):
+                              n_valid: int, axis: str, use_kernel: bool,
+                              select: str):
     """Local grouped scan + small all-gather merge for one shard.
 
     codes_shard: (G, rows, W) — this shard's contiguous row range of every
@@ -163,9 +243,11 @@ def _grouped_local_then_merge(codes_shard, queries, l: int, l_local: int,
     """
     if use_kernel:
         from repro.kernels import ops
-        cd, ci = ops.hamming_topk_grouped(codes_shard, queries, l_local)
+        cd, ci = ops.hamming_topk_grouped(codes_shard, queries, l_local,
+                                          select=select)
     else:
-        cd, ci = hamming_topk_grouped(codes_shard, queries, l_local)
+        cd, ci = hamming_topk_grouped(codes_shard, queries, l_local,
+                                      select=select)
     offset = jax.lax.axis_index(axis) * codes_shard.shape[1]
     gi = jnp.where(ci < 0, -1, ci + offset).astype(jnp.int32)
     # rows past the true table end (shard-divisibility padding) turn into
@@ -186,7 +268,8 @@ def _grouped_local_then_merge(codes_shard, queries, l: int, l_local: int,
 def hamming_topk_grouped_sharded(codes, queries, l: int, mesh,
                                  axis: str = "data",
                                  use_kernel: bool | None = None,
-                                 n_valid: int | None = None):
+                                 n_valid: int | None = None,
+                                 select: str | None = None):
     """Distributed grouped top-l scan: the multi-table analogue of
     ``hamming_topk_sharded``.
 
@@ -211,6 +294,7 @@ def hamming_topk_grouped_sharded(codes, queries, l: int, mesh,
     """
     if use_kernel is None:
         use_kernel = env_use_kernels(True)
+    select = env_fused_select(select)
     g, n, w = codes.shape
     if n_valid is None:
         n_valid = n
@@ -220,20 +304,22 @@ def hamming_topk_grouped_sharded(codes, queries, l: int, mesh,
         codes = jnp.pad(codes, ((0, 0), (0, pad), (0, 0)))
     n_pad = n + pad
     l_local = l + min(n_pad - n_valid, n_pad // shards)
-    fn = _grouped_sharded_fn(mesh, axis, l, l_local, n_valid, use_kernel)
+    fn = _grouped_sharded_fn(mesh, axis, l, l_local, n_valid, use_kernel,
+                             select)
     return fn(codes, queries)
 
 
 @lru_cache(maxsize=256)
 def _grouped_sharded_fn(mesh, axis: str, l: int, l_local: int, n_valid: int,
-                        use_kernel: bool):
+                        use_kernel: bool, select: str):
     """Jitted shard_map closure for hamming_topk_grouped_sharded, cached so
     the serving scan hot path doesn't rebuild and re-trace the distributed
     scan on every micro-batch (n_valid changes per index mutation, so churn
     rotates cache entries; the LRU bound keeps that in check)."""
     return jax.jit(shard_map_compat(
         partial(_grouped_local_then_merge, l=l, l_local=l_local,
-                n_valid=n_valid, axis=axis, use_kernel=use_kernel),
+                n_valid=n_valid, axis=axis, use_kernel=use_kernel,
+                select=select),
         mesh=mesh,
         in_specs=(P(None, axis, None), P()),
         out_specs=(P(), P()),

@@ -22,8 +22,26 @@ Two families of kernels live here:
   (distance, row-id) pairs ever reach HBM.  A tiny second-stage merge over
   grid·l ≪ n rows (see kernels/ops.py) yields the final (B, l) answer,
   bit-identical to lax.top_k over the full distance matrix.
+- ``hamming_topk_hist_kernel`` — same contract, cheaper selection.  The
+  argmin kernel pays l rounds of masked argmin over the (block_n, B) tile:
+  O(l·block_n·B) VPU work that dominates once HBM traffic is minimized.
+  Hamming distances over k-bit codes are bounded integers in [0, 32·W],
+  exactly the counting-sort regime: a two-pass **distance-histogram
+  select** first finds, per query, the cutoff radius r_b — the smallest
+  distance whose histogram prefix sum (CDF) reaches l — then emits every
+  row with dist < r_b plus the lowest-row-index ties at r_b.  The CDF is
+  evaluated lazily by bisection over the ≤ 32·W+1 possible distance
+  values (count(dist ≤ mid) is one compare-reduce pass), so selection
+  costs O(block_n·B·log(32W) + l·B·log(block_n)) instead of
+  O(l·block_n·B) — independent of l for the tile passes, which makes deep
+  scans (l in the hundreds) as cheap as shallow ones.  A ``dma=True``
+  variant additionally streams code tiles HBM→VMEM through a manually
+  double-buffered ``pltpu.make_async_copy`` pipeline over the (G, blocks)
+  grid, so popcount of tile i overlaps the fetch of tile i+1 (on CPU
+  interpret mode the copies are synchronous — the variant exists for TPU,
+  where BlockSpec streaming is replaced by explicit prefetch).
 
-The fused kernel runs on a (groups, blocks-per-group) grid: the code table
+The fused kernels run on a (groups, blocks-per-group) grid: the code table
 may be G stacked sub-tables (multi-table serving stacks L tables of
 n_live rows each) and each block is matched against only its own group's
 B query rows — so an L-table batched query is ONE kernel launch.
@@ -81,15 +99,7 @@ def hamming_distance_kernel(codes, query, *, block_n: int = 2048,
 
 def _batch_kernel(codes_ref, queries_ref, out_ref, *, n_words: int):
     # codes: (BN, W); queries: (B, W) resident whole (B*W words is tiny).
-    # Word-by-word XOR keeps everything on 2-D (BN, B) lanes — the natural
-    # VPU layout — instead of materializing a 3-D (BN, B, W) intermediate.
-    codes = codes_ref[...]
-    queries = queries_ref[...]
-    acc = jnp.zeros((codes.shape[0], queries.shape[0]), jnp.int32)
-    for w in range(n_words):
-        x = jnp.bitwise_xor(codes[:, w][:, None], queries[:, w][None, :])
-        acc += _popcount_u32(x)
-    out_ref[...] = acc
+    out_ref[...] = _popcount_tile(codes_ref[...], queries_ref[...], n_words)
 
 
 def _topk_fused_kernel(codes_ref, queries_ref, out_d_ref, out_i_ref, acc_ref,
@@ -102,12 +112,9 @@ def _topk_fused_kernel(codes_ref, queries_ref, out_d_ref, out_i_ref, acc_ref,
     ``jnp.min`` over the row-iota of the minima keeps ties deterministic
     (lowest row index wins), matching lax.top_k's stable order.
     """
-    codes = codes_ref[0]                      # (block_n, W)
-    queries = queries_ref[0]                  # (B, W)
-    acc = jnp.zeros((codes.shape[0], queries.shape[0]), jnp.int32)
-    for w in range(n_words):
-        x = jnp.bitwise_xor(codes[:, w][:, None], queries[:, w][None, :])
-        acc += _popcount_u32(x)
+    # (block_n, W) codes vs this group's (B, W) queries, word-by-word XOR
+    # on 2-D (BN, B) lanes — the natural VPU layout.
+    acc = _popcount_tile(codes_ref[0], queries_ref[0], n_words)
     # group-local row ids for this block; rows past the group's live region
     # (block padding) are masked to the sentinel so they always rank last.
     block_in_group = pl.program_id(1)
@@ -161,6 +168,201 @@ def hamming_topk_fused_kernel(codes, queries, l: int, n_valid: int, *,
         ],
         out_shape=[out_shape, out_shape],
         scratch_shapes=[pltpu.VMEM((block_n, b), jnp.int32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(codes, queries)
+
+
+def _popcount_tile(codes, queries, n_words: int):
+    """(block_n, W) codes vs (B, W) queries -> (block_n, B) int32 distances.
+    Word-by-word XOR keeps everything on 2-D VPU lanes (see _batch_kernel)."""
+    acc = jnp.zeros((codes.shape[0], queries.shape[0]), jnp.int32)
+    for w in range(n_words):
+        x = jnp.bitwise_xor(codes[:, w][:, None], queries[:, w][None, :])
+        acc += _popcount_u32(x)
+    return acc
+
+
+def _hist_select(acc, base, l: int, n_valid: int, max_dist: int,
+                 block_n: int):
+    """Two-pass counting-sort select over one (block_n, B) distance tile.
+
+    Pass 1 finds, per query, the cutoff radius r_b = the smallest distance
+    value whose histogram prefix sum reaches t = min(l, live rows in this
+    block).  The prefix sums (the distance CDF) are evaluated lazily by
+    bisection over [0, max_dist] — each probe is one compare-reduce pass —
+    instead of materializing all ≤ max_dist+1 bins: O(block_n·B·log maxd).
+
+    Pass 2 emits the rows with dist < r_b plus the deterministically-tied
+    rows at r_b (lowest row index wins, matching lax.top_k's stable order):
+    a cumsum over the keep mask assigns each kept row its output slot, and
+    a per-slot bisection over that cumsum (lower bound of slot j+1) turns
+    the scatter into l·B small gathers: O(l·B·log block_n).  Output slots
+    are in row order, NOT distance order — the contract only requires the
+    exact smallest-l *set* per block (ties to lowest row); the second-stage
+    lexicographic (distance, id) merge in ops.py restores sorted order.
+
+    Returns (out_d, out_i): (B, l) int32; slots past the live-row count
+    carry (DIST_SENTINEL, garbage id ≥ base) exactly like the exhausted
+    slots of the argmin kernel — the merge maps them to id -1.
+    """
+    rows = jax.lax.broadcasted_iota(jnp.int32, acc.shape, 0)
+    acc = jnp.where(base + rows >= n_valid, jnp.int32(DIST_SENTINEL), acc)
+    b = acc.shape[1]
+    # live rows in this block; also the per-query selection target t <= l.
+    t = jnp.minimum(jnp.clip(n_valid - base, 0, block_n), l)  # scalar
+
+    # -- pass 1: cutoff radius per query via bisection on the distance CDF.
+    # invariant: count(acc <= hi) >= t (true at hi = max_dist: every live
+    # row's distance is <= 32·W and padding rows sit at the sentinel).
+    lo = jnp.zeros((1, b), jnp.int32)
+    hi = jnp.full((1, b), max_dist, jnp.int32)
+    for _ in range(max(1, max_dist.bit_length())):
+        mid = (lo + hi) >> 1
+        cnt = jnp.sum((acc <= mid).astype(jnp.int32), axis=0, keepdims=True)
+        ge = cnt >= t
+        hi = jnp.where(ge, mid, hi)
+        lo = jnp.where(ge, lo, mid + 1)
+    r = hi                                                    # (1, B)
+
+    # -- pass 2: keep mask with lowest-row-index ties at the cutoff.
+    less = jnp.sum((acc < r).astype(jnp.int32), axis=0, keepdims=True)
+    tie = acc == r
+    tie_rank = jnp.cumsum(tie.astype(jnp.int32), axis=0) - 1
+    keep = (acc < r) | (tie & (tie_rank < (t - less)))
+    pos = jnp.cumsum(keep.astype(jnp.int32), axis=0)          # 1-based slots
+    # emit: lower-bound bisection over the monotone cumsum finds, for every
+    # output slot j, the row holding the (j+1)-th kept candidate.
+    tj = jax.lax.broadcasted_iota(jnp.int32, (l, b), 0) + 1   # targets
+    lo2 = jnp.zeros((l, b), jnp.int32)
+    hi2 = jnp.full((l, b), block_n - 1, jnp.int32)
+    for _ in range(max(1, (block_n - 1).bit_length())):
+        mid = (lo2 + hi2) >> 1
+        cm = jnp.take_along_axis(pos, mid, axis=0)            # (l, B)
+        ge = cm >= tj
+        hi2 = jnp.where(ge, mid, hi2)
+        lo2 = jnp.where(ge, lo2, mid + 1)
+    d_sel = jnp.take_along_axis(acc, hi2, axis=0)             # (l, B)
+    slot_ok = tj <= t
+    out_d = jnp.where(slot_ok, d_sel, jnp.int32(DIST_SENTINEL))
+    return out_d.T, (base + hi2).T                            # (B, l) each
+
+
+def _topk_hist_kernel(codes_ref, queries_ref, out_d_ref, out_i_ref, *,
+                      n_words: int, l: int, block_n: int, n_valid: int,
+                      max_dist: int):
+    """One grid step of the histogram-select fused scan (BlockSpec-streamed
+    code tiles; see _topk_hist_dma_kernel for the manual-DMA variant)."""
+    acc = _popcount_tile(codes_ref[0], queries_ref[0], n_words)
+    base = pl.program_id(1) * block_n
+    out_d, out_i = _hist_select(acc, base, l, n_valid, max_dist, block_n)
+    out_d_ref[0, 0] = out_d
+    out_i_ref[0, 0] = out_i
+
+
+def _topk_hist_dma_kernel(codes_hbm_ref, queries_ref, out_d_ref, out_i_ref,
+                          buf_ref, sem_ref, *, n_words: int, l: int,
+                          block_n: int, n_valid: int, max_dist: int,
+                          grid_n: int):
+    """Histogram-select step with a double-buffered HBM→VMEM code pipeline.
+
+    The code stack stays in HBM (memory_space=ANY); each sequential step of
+    the (G, blocks) grid waits on the async copy of its own tile (started
+    by the previous step) and immediately starts the copy of the next tile
+    into the other buffer, so the popcount of tile i overlaps the fetch of
+    tile i+1.  VMEM scratch persists across grid steps (the grid is
+    ("arbitrary", "arbitrary"), i.e. sequential), which is what carries the
+    in-flight copy across the step boundary.
+    """
+    t, i = pl.program_id(0), pl.program_id(1)
+    step = t * grid_n + i                  # linear position in the grid
+    n_steps = pl.num_programs(0) * grid_n
+    slot = jax.lax.rem(step, 2)
+    nxt_slot = jax.lax.rem(step + 1, 2)
+    nxt_t = (step + 1) // grid_n
+    nxt_i = jax.lax.rem(step + 1, grid_n)
+
+    def copy_tile(slot_idx, g_idx, blk_idx):
+        return pltpu.make_async_copy(
+            codes_hbm_ref.at[g_idx, pl.dslice(blk_idx * block_n, block_n), :],
+            buf_ref.at[slot_idx],
+            sem_ref.at[slot_idx])
+
+    @pl.when(step == 0)                    # warm-up: fetch the first tile
+    def _():
+        copy_tile(slot, t, i).start()
+
+    @pl.when(step + 1 < n_steps)           # prefetch the next tile
+    def _():
+        copy_tile(nxt_slot, nxt_t, nxt_i).start()
+
+    copy_tile(slot, t, i).wait()
+    acc = _popcount_tile(buf_ref[slot], queries_ref[0], n_words)
+    out_d, out_i = _hist_select(acc, i * block_n, l, n_valid, max_dist,
+                                block_n)
+    out_d_ref[0, 0] = out_d
+    out_i_ref[0, 0] = out_i
+
+
+@functools.partial(jax.jit, static_argnames=("l", "n_valid", "block_n",
+                                             "interpret", "dma"))
+def hamming_topk_hist_kernel(codes, queries, l: int, n_valid: int, *,
+                             block_n: int = 2048, interpret: bool = False,
+                             dma: bool = False):
+    """Histogram-select fused scan: same shapes, grid and block-local
+    candidate contract as ``hamming_topk_fused_kernel`` (masked slots carry
+    DIST_SENTINEL; each block's l slots hold the exact block-local
+    smallest-l set with ties to the lowest row index), but selection is the
+    two-pass counting-sort of ``_hist_select`` instead of l argmin rounds.
+    The per-block slot order differs from the argmin kernel (row order, not
+    distance order) — results are bit-identical after the (distance, id)
+    merge in ops.hamming_topk_grouped.
+
+    dma=True streams code tiles through the manually double-buffered async
+    copy pipeline (the kernel then reads ``codes`` from HBM/ANY memory
+    space); dma=False uses ordinary BlockSpec streaming.  Both are exact.
+    """
+    g, n_pad, w = codes.shape
+    b = queries.shape[1]
+    grid_n = n_pad // block_n
+    max_dist = 32 * w
+    out_shape = jax.ShapeDtypeStruct((g, grid_n, b, l), jnp.int32)
+    out_specs = [
+        pl.BlockSpec((1, 1, b, l), lambda t, i: (t, i, 0, 0)),
+        pl.BlockSpec((1, 1, b, l), lambda t, i: (t, i, 0, 0)),
+    ]
+    if not dma:
+        return pl.pallas_call(
+            functools.partial(_topk_hist_kernel, n_words=w, l=l,
+                              block_n=block_n, n_valid=n_valid,
+                              max_dist=max_dist),
+            grid=(g, grid_n),
+            in_specs=[
+                pl.BlockSpec((1, block_n, w), lambda t, i: (t, i, 0)),
+                pl.BlockSpec((1, b, w), lambda t, i: (t, 0, 0)),
+            ],
+            out_specs=out_specs,
+            out_shape=[out_shape, out_shape],
+            compiler_params=CompilerParams(
+                dimension_semantics=("arbitrary", "arbitrary")),
+            interpret=interpret,
+        )(codes, queries)
+    return pl.pallas_call(
+        functools.partial(_topk_hist_dma_kernel, n_words=w, l=l,
+                          block_n=block_n, n_valid=n_valid,
+                          max_dist=max_dist, grid_n=grid_n),
+        grid=(g, grid_n),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),     # codes stay in HBM
+            pl.BlockSpec((1, b, w), lambda t, i: (t, 0, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=[out_shape, out_shape],
+        scratch_shapes=[
+            pltpu.VMEM((2, block_n, w), jnp.uint32),  # double buffer
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
         compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,

@@ -11,11 +11,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.search import env_fused_select
 from repro.kernels.bilinear_hash import bilinear_hash_kernel
 from repro.kernels.hamming import (DIST_SENTINEL,
                                    hamming_distance_batch_kernel,
                                    hamming_distance_kernel,
-                                   hamming_topk_fused_kernel)
+                                   hamming_topk_fused_kernel,
+                                   hamming_topk_hist_kernel)
 from repro.kernels.lbh_grad import lbh_chain_kernel
 from repro.utils.bits import n_words
 
@@ -87,9 +89,8 @@ def hamming_distances(codes, query, *, block_n: int = 2048,
     return d[:n]
 
 
-@functools.partial(jax.jit, static_argnames=("l", "block_n", "interpret"))
-def hamming_topk(codes, query, l: int, *, block_n: int = 2048,
-                 interpret: bool | None = None):
+def hamming_topk(codes, query, l: int, *, block_n: int = 4096,
+                 interpret: bool | None = None, select: str | None = None):
     """Smallest-l Hamming matches: (dists (l,), idx (l,)).
 
     Routed through the fused scan+select kernel — the full distance vector
@@ -97,7 +98,8 @@ def hamming_topk(codes, query, l: int, *, block_n: int = 2048,
     to the lowest index); slots past n carry DIST_SENTINEL / id -1.
     """
     d, idx = hamming_topk_grouped(codes[None], query[None, None, :], l,
-                                  block_n=block_n, interpret=interpret)
+                                  block_n=block_n, interpret=interpret,
+                                  select=select)
     return d[0, 0], idx[0, 0]
 
 
@@ -115,9 +117,9 @@ def hamming_distances_batch(codes, queries, *, block_n: int = 2048,
     return d[:n, :queries.shape[0]].T
 
 
-@functools.partial(jax.jit, static_argnames=("l", "block_n", "interpret"))
-def hamming_topk_batch(codes, queries, l: int, *, block_n: int = 2048,
-                       interpret: bool | None = None):
+def hamming_topk_batch(codes, queries, l: int, *, block_n: int = 4096,
+                       interpret: bool | None = None,
+                       select: str | None = None):
     """Batched smallest-l matches: (dists (B, l), idx (B, l)).
 
     Fused scan+select: HBM traffic is the code table plus O(grid·B·l)
@@ -125,13 +127,14 @@ def hamming_topk_batch(codes, queries, l: int, *, block_n: int = 2048,
     scan_traffic_model).  Bit-identical to lax.top_k over the distances.
     """
     d, idx = hamming_topk_grouped(codes[None], queries[None], l,
-                                  block_n=block_n, interpret=interpret)
+                                  block_n=block_n, interpret=interpret,
+                                  select=select)
     return d[0], idx[0]
 
 
-@functools.partial(jax.jit, static_argnames=("l", "block_n", "interpret"))
-def hamming_topk_grouped(codes, queries, l: int, *, block_n: int = 2048,
-                         interpret: bool | None = None):
+def hamming_topk_grouped(codes, queries, l: int, *, block_n: int = 4096,
+                         interpret: bool | None = None,
+                         select: str | None = None, dma: bool = False):
     """Fused smallest-l scan over G stacked code groups, ONE kernel launch.
 
     codes: (G, n, W) uint32 — G sub-tables over the same row space (the
@@ -141,16 +144,37 @@ def hamming_topk_grouped(codes, queries, l: int, *, block_n: int = 2048,
     the group's row space, sorted ascending by (distance, id) — bit-identical
     to per-group jax.lax.top_k(-dists).  When l > n the tail columns carry
     (DIST_SENTINEL, -1).
+
+    select: block-local selection algorithm — ``"hist"`` (default;
+    counting-sort select, O(block_n·B·log 32W) tile passes independent of
+    l) or ``"argmin"`` (legacy l-round masked argmin; the
+    ``REPRO_FUSED_SELECT=argmin`` escape hatch).  dma=True additionally
+    routes the hist kernel through its manually double-buffered HBM→VMEM
+    copy pipeline (TPU overlap; argmin ignores it).  All combinations are
+    bit-identical — the env knob and flags only trade selection cost.
     """
+    select = env_fused_select(select)
+    return _topk_grouped_impl(codes, queries, l, block_n=block_n,
+                              interpret=_interpret_default(interpret),
+                              select=select, dma=dma)
+
+
+@functools.partial(jax.jit, static_argnames=("l", "block_n", "interpret",
+                                             "select", "dma"))
+def _topk_grouped_impl(codes, queries, l: int, *, block_n: int,
+                       interpret: bool, select: str, dma: bool):
     g, n, w = codes.shape
     b = queries.shape[1]
     bn = _block_rows(n, block_n)
     padded = _pad_to(codes, 1, bn)
     q = _pad_to(queries, 1, SUBLANE)
     l_k = min(l, bn)    # a block holds bn rows; l_k = bn already emits all
-    cd, ci = hamming_topk_fused_kernel(
-        padded, q, l_k, n, block_n=bn,
-        interpret=_interpret_default(interpret))
+    if select == "hist":
+        cd, ci = hamming_topk_hist_kernel(
+            padded, q, l_k, n, block_n=bn, interpret=interpret, dma=dma)
+    else:
+        cd, ci = hamming_topk_fused_kernel(
+            padded, q, l_k, n, block_n=bn, interpret=interpret)
     grid_n = cd.shape[1]
     # second-stage merge over grid·l_k candidates per (group, query):
     # lexicographic (distance, id) sort keeps ties at the lowest id, exactly
@@ -168,7 +192,7 @@ def hamming_topk_grouped(codes, queries, l: int, *, block_n: int = 2048,
 
 
 def scan_traffic_model(n: int, w: int, b: int, l: int = 16,
-                       block_n: int = 2048, fused: bool = True,
+                       block_n: int = 4096, fused: bool = True,
                        g: int = 1) -> int:
     """Modeled HBM bytes for one batched Hamming scan launch.
 
@@ -184,8 +208,10 @@ def scan_traffic_model(n: int, w: int, b: int, l: int = 16,
     Fused: stream the code groups once plus write and read back only the
     (g, grid, B, l) block-local candidate (distance, id) pairs
     (2·g·grid·B·l·8).  Query bytes (g·B·W·4) are counted for both; at
-    B=32, k=128, l=16 the fused path cuts traffic ~13.6x
-    (272 -> ~20 bytes/point, any g).
+    B=32, k=128, l=16, block_n=4096 the fused path cuts traffic ~15x
+    (272 -> ~18 bytes/point, any g).  Selection algorithm (hist/argmin)
+    does not change traffic — both kernels emit the same candidate pairs;
+    see scan_select_model for the term that differs.
     """
     bn = _block_rows(n, block_n)
     code_bytes = g * (n * w * 4 + b * w * 4)
@@ -193,6 +219,45 @@ def scan_traffic_model(n: int, w: int, b: int, l: int = 16,
         return code_bytes + 2 * g * n * b * 4
     grid = -(-n // bn)
     return code_bytes + 2 * g * grid * b * min(l, bn) * 8
+
+
+def scan_select_model(n: int, b: int, l: int = 16, k: int = 128,
+                      block_n: int = 4096, select: str = "hist",
+                      g: int = 1) -> int:
+    """Modeled VPU element-ops the fused scan spends on *selection* for one
+    launch (popcount cost is identical either way and excluded).  HBM
+    traffic (scan_traffic_model) is also selection-invariant — both kernels
+    emit the same (grid, B, l) candidate pairs — so this is the term that
+    decides fused-scan latency once traffic is minimized.
+
+    - ``argmin``: l rounds of masked argmin over each (block_n, B) tile;
+      each round is ~3 full-tile passes (min-reduce, tie-break row min,
+      sentinel mask update) -> 3·l·block_n·B per block.  Grows linearly
+      with l — at l=512 the selection costs 1536 tile passes.
+    - ``hist``: two-pass counting-sort select; the distance-CDF bisection
+      is ceil(log2(32·ceil(k/32)+1)) compare-reduce tile passes, plus ~5
+      fixed passes (cutoff counts, tie cumsum, keep mask, slot cumsum) and
+      an emission bisection over the slot cumsum costing
+      2·ceil(log2(block_n))·l·B (small: l·B elements, not block_n·B) ->
+      independent of l in the tile term.
+
+    The crossover sits near l ≈ (log2(32W) + 5) / 3 ≈ 4; everywhere the
+    serving paths operate (l ≥ 8) the histogram select is cheaper, and at
+    l = 128 it models ~28x fewer element-ops.  Deterministic arithmetic —
+    benchmarks/check_regression.py gates on the modeled ratio, which
+    cannot flake.
+    """
+    bn = _block_rows(n, block_n)
+    grid = -(-n // bn)
+    l_k = min(l, bn)
+    w = n_words(k)
+    if select == "argmin":
+        per_block = 3 * l_k * bn * b
+    else:
+        cdf_steps = max(1, (32 * w).bit_length())
+        emit_steps = max(1, (bn - 1).bit_length())
+        per_block = (cdf_steps + 5) * bn * b + 2 * emit_steps * l_k * b
+    return g * grid * per_block
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))

@@ -10,6 +10,14 @@ Three host/device stages, each batched over B queries x L tables:
 3. re-rank — a single gather + batched reduce over the padded candidate
    matrix (core.search.margin_rerank_batch), bit-identical to issuing the
    same queries one at a time.
+
+The scan backend (MultiTableIndex.query_scan_batch) shares stage 1 (the
+stacked query hashing below) and stage 3, but replaces the host probe of
+stage 2 with the fused device scan; its candidate unions are built on
+device, so PAD_MULTIPLE only governs the probe path's rerank shapes.  The
+scan depth l the fused kernel selects at is a free knob under histogram
+selection (see kernels/README.md) — deep-l scans reach this module only
+as wider rerank gathers.
 """
 from __future__ import annotations
 

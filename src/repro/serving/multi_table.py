@@ -372,6 +372,10 @@ class MultiTableIndex:
         Hamming short-list size, as in the seed-era signature), NOT the
         number of answers — ``topk`` is.  query_batch(w, l=k) corresponds
         to query_scan_batch(w, topk=k), with ``l`` controlling recall.
+        Deep scans (l in the hundreds) are cheap under the default
+        histogram selection (``config.fused_select`` / REPRO_FUSED_SELECT
+        = "hist": selection cost is independent of l per tile) — when
+        recall matters more than rerank cost, raise ``l``, not ``tables``.
         ids_topk/margins_topk are set when topk > 1 and always have
         exactly topk columns (impossible slots: id -1 / margin +inf).
         mask: optional bool mask over stable-id space restricting answers,
@@ -397,15 +401,19 @@ class MultiTableIndex:
         codes_dev, live_rows_dev = self._scan_state(mesh, shard_axis)
         n_live = self._live_rows.shape[0]
         qcodes = bq.hash_queries_all(self.families, w)        # (L, B, W)
+        select = self.config.fused_select       # None -> REPRO_FUSED_SELECT
         if mesh is not None:
             _, idx = hamming_topk_grouped_sharded(
                 codes_dev, qcodes, l, mesh, axis=shard_axis,
-                use_kernel=self.config.use_kernels, n_valid=n_live)
+                use_kernel=self.config.use_kernels, n_valid=n_live,
+                select=select)
         elif self.config.use_kernels:
             from repro.kernels import ops
-            _, idx = ops.hamming_topk_grouped(codes_dev, qcodes, l)
+            _, idx = ops.hamming_topk_grouped(codes_dev, qcodes, l,
+                                              select=select)
         else:
-            _, idx = hamming_topk_grouped(codes_dev, qcodes, l)
+            _, idx = hamming_topk_grouped(codes_dev, qcodes, l,
+                                          select=select)
         # device-side union/dedup: per query, sort the L·l live-row ids and
         # invalidate repeats and sentinel (-1) slots.
         flat = jnp.transpose(idx, (1, 0, 2)).reshape(b, -1)   # (B, L*l)

@@ -22,6 +22,14 @@ Two interchangeable backends (``mode``):
   tables and the whole micro-batch, no host tables and no candidate cache.
   With ``mesh=``, the scan runs row-sharded over the mesh axis — one local
   launch per shard, answers bit-identical to the single-device scan.
+
+Scan depth (``scan_l``) trades recall for rerank cost.  Under the default
+histogram selection (``IndexConfig.fused_select`` / REPRO_FUSED_SELECT =
+"hist") the kernel's selection cost is independent of l per code tile, so
+deep scans — scan_l in the hundreds — cost little more than shallow ones
+and buy most of the recall back on coarse (low-bit) codes; only the
+re-rank gather grows with l.  Under the legacy "argmin" selection, kernel
+time grows linearly with scan_l — keep it shallow there.
 """
 from __future__ import annotations
 

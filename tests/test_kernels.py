@@ -65,17 +65,20 @@ def test_hamming_batch_vs_single(rng, n, b, w):
         assert (gathered == np.asarray(d[i])).all()
 
 
+@pytest.mark.parametrize("select", ["argmin", "hist"])
 @pytest.mark.parametrize("n,b,w,l", [
     (1000, 1, 1, 8), (512, 32, 4, 16), (100, 5, 2, 32), (2049, 9, 4, 7),
     (300, 3, 2, 5),            # ragged n: not a multiple of the sublane (8)
     (1, 1, 1, 1),
 ])
-def test_hamming_topk_fused_vs_oracle(rng, n, b, w, l):
+def test_hamming_topk_fused_vs_oracle(rng, n, b, w, l, select):
     """Fused scan+select == lax.top_k over the full distance matrix, bit
-    for bit (including tie order: lowest index wins)."""
+    for bit (including tie order: lowest index wins), under both selection
+    algorithms (l-round argmin and the histogram/counting-sort select)."""
     codes = rng.integers(0, 2**32, (n, w), dtype=np.uint32)
     qs = rng.integers(0, 2**32, (b, w), dtype=np.uint32)
-    d, i = ops.hamming_topk_batch(jnp.asarray(codes), jnp.asarray(qs), l)
+    d, i = ops.hamming_topk_batch(jnp.asarray(codes), jnp.asarray(qs), l,
+                                  select=select)
     full = np.stack([np_hamming_packed(codes, q[None, :]) for q in qs])
     neg, oidx = jax.lax.top_k(-jnp.asarray(full), min(l, n))
     assert np.array_equal(np.asarray(d), np.asarray(-neg))
@@ -129,6 +132,121 @@ def test_hamming_topk_grouped_vs_per_group(rng, g, n, b, w, l):
     dj, ij = jnp_grouped(jnp.asarray(codes), jnp.asarray(qs), l)
     assert np.array_equal(np.asarray(dg), np.asarray(dj))
     assert np.array_equal(np.asarray(ig), np.asarray(ij))
+
+
+def _all_selection_paths(codes, qs, l, block_n=4096):
+    """(dists, ids) from every selection implementation, keyed by name.
+    All run in interpret mode (no TPU needed), so this parity matrix is
+    exercised on the REPRO_USE_KERNELS=0 CI leg too."""
+    from repro.core import search
+    codes, qs = jnp.asarray(codes), jnp.asarray(qs)
+    return {
+        "kernel_argmin": ops.hamming_topk_grouped(
+            codes, qs, l, block_n=block_n, select="argmin"),
+        "kernel_hist": ops.hamming_topk_grouped(
+            codes, qs, l, block_n=block_n, select="hist"),
+        "kernel_hist_dma": ops.hamming_topk_grouped(
+            codes, qs, l, block_n=block_n, select="hist", dma=True),
+        "jnp_lax": search.hamming_topk_grouped(codes, qs, l,
+                                               select="argmin"),
+        "jnp_hist": search.hamming_topk_grouped_hist(codes, qs, l),
+    }
+
+
+def _assert_paths_identical(paths):
+    ref_name, (ref_d, ref_i) = next(iter(paths.items()))
+    ref_d, ref_i = np.asarray(ref_d), np.asarray(ref_i)
+    for name, (d, i) in paths.items():
+        assert np.array_equal(np.asarray(d), ref_d), f"{name} != {ref_name}"
+        assert np.array_equal(np.asarray(i), ref_i), f"{name} != {ref_name}"
+    return ref_d, ref_i
+
+
+def test_selection_parity_constant_codes(rng):
+    """Adversarial ties: every row of every table identical -> every
+    distance equal -> the top-l is decided purely by the tie rule (lowest
+    row index).  All five selection paths must agree bit for bit."""
+    codes = np.zeros((2, 600, 2), np.uint32)
+    qs = rng.integers(0, 2**32, (2, 4, 2), dtype=np.uint32)
+    d, i = _assert_paths_identical(
+        _all_selection_paths(codes, qs, 12, block_n=256))
+    assert np.array_equal(i, np.broadcast_to(np.arange(12), i.shape))
+    assert (d == d[..., :1]).all()
+
+
+def test_selection_parity_l_equals_block(rng):
+    """l == block_n: every block emits its whole tile; the cutoff radius is
+    the tile maximum and the merge does all the work."""
+    codes = rng.integers(0, 2**32, (2, 512, 2), dtype=np.uint32)
+    qs = rng.integers(0, 2**32, (2, 3, 2), dtype=np.uint32)
+    _assert_paths_identical(_all_selection_paths(codes, qs, 256,
+                                                 block_n=256))
+
+
+def test_selection_parity_l_exceeds_n(rng):
+    """l > n: real slots match, tails carry (DIST_SENTINEL, -1) on every
+    path."""
+    from repro.kernels.hamming import DIST_SENTINEL
+    codes = rng.integers(0, 2**32, (2, 7, 1), dtype=np.uint32)
+    qs = rng.integers(0, 2**32, (2, 3, 1), dtype=np.uint32)
+    d, i = _assert_paths_identical(_all_selection_paths(codes, qs, 20))
+    assert (d[..., 7:] == DIST_SENTINEL).all() and (i[..., 7:] == -1).all()
+
+
+def test_selection_parity_saturated_distances(rng):
+    """Distance-saturated queries (the paper's flip_packed worst case):
+    query = bitwise NOT of a constant table -> every distance == k, the
+    cutoff radius sits at the histogram's top bin, and everything ties."""
+    from repro.utils.bits import flip_packed, pack_signs
+    k = 50
+    signs = jnp.asarray(np.ones((1, k), np.int8))
+    row = np.asarray(pack_signs(signs))                  # one packed code
+    codes = np.broadcast_to(row, (1, 300, row.shape[1])).copy()
+    q_sat = np.asarray(flip_packed(jnp.asarray(row), k))  # distance k to all
+    q_zero = row.copy()                                   # distance 0 to all
+    qs = np.stack([np.concatenate([q_sat, q_zero])])      # (1, 2, W)
+    d, i = _assert_paths_identical(_all_selection_paths(codes, qs, 40))
+    assert (d[0, 0] == k).all() and (d[0, 1] == 0).all()
+    assert np.array_equal(i[0, 0], np.arange(40))
+    assert np.array_equal(i[0, 1], np.arange(40))
+
+
+def test_selection_parity_few_distinct_values(rng):
+    """Low-bit regime (the smoke config's failure mode): thousands of rows
+    share each distance value, so the cutoff cohort is huge and selection
+    is dominated by tie handling."""
+    pool = rng.integers(0, 2**32, (3, 1), dtype=np.uint32)
+    codes = pool[rng.integers(0, 3, 2000)][None]          # (1, 2000, 1)
+    qs = rng.integers(0, 2**32, (1, 5, 1), dtype=np.uint32)
+    _assert_paths_identical(_all_selection_paths(codes, qs, 100,
+                                                 block_n=512))
+
+
+def test_select_env_and_validation(monkeypatch):
+    from repro.core.search import env_fused_select
+    monkeypatch.delenv("REPRO_FUSED_SELECT", raising=False)
+    assert env_fused_select(None) == "hist"
+    monkeypatch.setenv("REPRO_FUSED_SELECT", "argmin")
+    assert env_fused_select(None) == "argmin"
+    assert env_fused_select("hist") == "hist"   # explicit beats env
+    monkeypatch.setenv("REPRO_FUSED_SELECT", "bogus")
+    assert env_fused_select(None) == "hist"     # unknown env -> default
+    with pytest.raises(ValueError):
+        env_fused_select("bogus")               # explicit bogus -> loud
+
+
+def test_scan_select_model():
+    """The selection-cost model must show the histogram select strictly
+    cheaper everywhere the serving paths operate (l >= 8), with the
+    advantage growing in l (argmin is linear in l, hist is flat)."""
+    ratios = []
+    for l in (8, 32, 128, 512):
+        a = ops.scan_select_model(1_000_000, 32, l, select="argmin")
+        h = ops.scan_select_model(1_000_000, 32, l, select="hist")
+        assert a > 0 and h > 0 and a > h
+        ratios.append(a / h)
+    assert ratios == sorted(ratios)
+    assert ratios[2] >= 8.0      # the check_regression.py floor, l=128
 
 
 def test_hamming_sublane_misaligned_n(rng):

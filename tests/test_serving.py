@@ -190,9 +190,9 @@ def test_scan_single_launch_any_tables(corpus, queries, monkeypatch):
     calls = {"n": 0}
     real = mtb.hamming_topk_grouped
 
-    def counting(codes, qs, l):
+    def counting(codes, qs, l, **kw):
         calls["n"] += 1
-        return real(codes, qs, l)
+        return real(codes, qs, l, **kw)
 
     monkeypatch.setattr(mtb, "hamming_topk_grouped", counting)
     for L in (1, 4):
@@ -223,6 +223,30 @@ def test_scan_matches_per_table_loop(corpus, queries):
             [per_table[t][b] for t in range(3)])) for b in range(8)], 1)
     assert np.array_equal(res.ids, ids[:, 0])
     assert np.array_equal(res.margins, margins[:, 0])
+
+
+def test_scan_select_modes_parity(corpus, queries):
+    """query_scan_batch answers are identical under histogram and argmin
+    selection (IndexConfig.fused_select), on both the kernel and jnp legs,
+    including a deep scan at l == n_live and the l > n_live sentinel case
+    — the large-l regime the histogram kernel makes viable."""
+    n_live = corpus.x.shape[0]
+    for use_kernels in (False, True):
+        mt = MultiTableIndex(
+            _cfg(tables=2, use_kernels=use_kernels)).fit(corpus.x)
+        for l in (16, n_live, n_live + 100):
+            results = {}
+            for select in ("argmin", "hist"):
+                mt.config.fused_select = select
+                results[select] = mt.query_scan_batch(queries[:8], l=l,
+                                                      topk=3)
+            a, h = results["argmin"], results["hist"]
+            assert np.array_equal(a.ids, h.ids)
+            assert np.array_equal(a.margins, h.margins)
+            assert np.array_equal(a.ids_topk, h.ids_topk)
+            assert np.array_equal(a.margins_topk, h.margins_topk)
+            for ca, ch in zip(a.candidates, h.candidates):
+                assert np.array_equal(ca, ch)
 
 
 def test_scan_kernel_path_matches_jnp(corpus, queries):
