@@ -36,6 +36,16 @@ The gate also refuses a record with no ``serving_async`` sweep rows (or
 inconsistent shed/completion accounting) and one with no ``kernel_sweep``
 rows — the selection-sweep telemetry must keep flowing into the
 trajectory.
+
+PR-6 adds the ``serving_mixed`` gates over the LSM delta index: the
+seeded soak must report bit-parity with a fresh monolithic index across
+>=2 compaction cycles and identical recall after compaction; at least one
+open-loop row must show queries and inserts genuinely concurrent
+(``query_qps > 0`` *and* ``insert_rows_per_s > 0``) with a compaction
+crossed mid-window; and no row may stall — ``max_pause_ms`` is capped at
+a generous 3000ms (observed ~115ms scan / ~640ms probe on the smoke
+config; the cap only catches an unbounded compaction pause, not runner
+noise).
 """
 from __future__ import annotations
 
@@ -50,6 +60,8 @@ B1_KERNEL_RATIO_FLOOR = 0.9  # PR-5: b=1 fused kernel >=0.9x unfused QPS
 SELECT_MODEL_FLOOR = 8.0     # PR-5: modeled hist select >=8x cheaper, l=128
 SWEEP_L128_FLOOR = 1.0       # PR-5: hist no slower than argmin at l=128
 RECALL_FLOOR = 0.5           # PR-5: deep-scan recall@20 gauge (reads ~1.0)
+MIXED_SOAK_COMPACTIONS = 2   # PR-6: soak must cross >=2 compaction cycles
+MIXED_PAUSE_CAP_MS = 3000.0  # PR-6: no query may stall behind a compaction
 
 
 def _fail(failures: list[str], msg: str) -> None:
@@ -175,6 +187,59 @@ def check(fresh: dict, baseline: dict | None) -> list[str]:
                             f"offered/completed/shed accounting")
         else:
             _ok(f"{len(rows)} async sweep rows, accounting consistent")
+
+    # -- mixed read/write serving over the LSM delta index ------------------
+    mixed = fresh.get("serving_mixed")
+    if not mixed or not mixed.get("rows"):
+        _fail(failures, "no serving_mixed rows in fresh record")
+    else:
+        soak = mixed["soak"]
+        if not soak.get("parity_ok"):
+            _fail(failures, "mixed soak lost bit-parity with the fresh "
+                            "monolithic index")
+        elif soak["compactions"] < MIXED_SOAK_COMPACTIONS:
+            _fail(failures, f"mixed soak crossed only "
+                            f"{soak['compactions']} compaction cycle(s) < "
+                            f"{MIXED_SOAK_COMPACTIONS} (delta never filled "
+                            f"— the parity claim is untested)")
+        else:
+            _ok(f"mixed soak bit-parity across {soak['compactions']} "
+                f"compactions")
+        if soak["recall_post"] != soak["recall_fresh"]:
+            _fail(failures, f"post-compaction recall "
+                            f"{soak['recall_post']:.4f} != fresh-index "
+                            f"recall {soak['recall_fresh']:.4f}")
+        else:
+            _ok(f"post-compaction recall == fresh recall "
+                f"({soak['recall_post']:.2f})")
+        rows = mixed["rows"]
+        bad = [r for r in rows
+               if r["completed"] + r["shed"] != r["offered"]]
+        if bad:
+            _fail(failures, f"{len(bad)} mixed rows with inconsistent "
+                            f"offered/completed/shed accounting")
+        concurrent = [r for r in rows
+                      if r["query_qps"] > 0 and r["insert_rows_per_s"] > 0]
+        if not concurrent:
+            _fail(failures, "no mixed row with queries and inserts "
+                            "concurrently > 0 — writes starved reads or "
+                            "vice versa")
+        else:
+            _ok(f"{len(concurrent)}/{len(rows)} mixed rows with live "
+                f"concurrent read+write traffic")
+        if not any(r["compactions_crossed"] >= 1 for r in rows):
+            _fail(failures, "no mixed row crossed a compaction during its "
+                            "timed window")
+        else:
+            _ok("compaction crossed inside a timed mixed window")
+        worst = max((r["max_pause_ms"] for r in rows), default=0.0)
+        if worst > MIXED_PAUSE_CAP_MS:
+            _fail(failures, f"mixed max query pause {worst:.0f}ms > "
+                            f"{MIXED_PAUSE_CAP_MS:.0f}ms cap (compaction "
+                            f"is blocking the read path)")
+        else:
+            _ok(f"mixed max query pause {worst:.0f}ms <= "
+                f"{MIXED_PAUSE_CAP_MS:.0f}ms")
 
     return failures
 

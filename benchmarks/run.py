@@ -18,8 +18,8 @@ def smoke(json_path: str | None = None) -> None:
     """Fast CI path: import every benchmark module (catches bit-rot) and run
     a miniature serving sweep plus the fused-scan benchmark end to end."""
     from benchmarks import (fig2_collision, fig34_active_learning,  # noqa: F401
-                            roofline_table, serving_async, serving_scan,
-                            tables_efficiency)
+                            roofline_table, serving_async, serving_mixed,
+                            serving_scan, tables_efficiency)
 
     _section("smoke — serving sweep (tiny)")
     t0 = time.perf_counter()
@@ -38,11 +38,16 @@ def smoke(json_path: str | None = None) -> None:
     serving_async.run(json_path=json_path, smoke=True)
     print(f"# async smoke ok in {time.perf_counter() - t0:.1f}s")
 
+    _section("smoke — mixed read/write serving over LSM delta index (tiny)")
+    t0 = time.perf_counter()
+    serving_mixed.run(json_path=json_path, smoke=True)
+    print(f"# mixed smoke ok in {time.perf_counter() - t0:.1f}s")
+
 
 def main(json_path: str | None = None) -> None:
     from benchmarks import (fig2_collision, fig34_active_learning,
-                            roofline_table, serving_async, serving_scan,
-                            tables_efficiency)
+                            roofline_table, serving_async, serving_mixed,
+                            serving_scan, tables_efficiency)
 
     summary: list[tuple[str, float, str]] = []
 
@@ -89,6 +94,12 @@ def main(json_path: str | None = None) -> None:
     serving_async.run(json_path=json_path)
     summary.append(("serving_async_poisson", (time.perf_counter() - t0) * 1e6,
                     "qps/latency/shed vs arrival-rate x deadline"))
+
+    _section("Serving — mixed read/write traffic over LSM delta index")
+    t0 = time.perf_counter()
+    serving_mixed.run(json_path=json_path)
+    summary.append(("serving_mixed_lsm", (time.perf_counter() - t0) * 1e6,
+                    "qps/insert-rate/pause across live compactions"))
 
     _section("Roofline table (from dry-run artifacts)")
     t0 = time.perf_counter()

@@ -1,0 +1,316 @@
+"""Open-loop mixed read/write workload on the LSM delta index.
+
+serving_async.py answers the read-only question (throughput at fixed
+latency under Poisson arrivals).  The question the LSM subsystem exists to
+answer is harsher: what happens to query latency when INSERTS arrive in
+the same stream — every insert invalidating whatever device state the
+backend can't keep resident — and incremental compaction keeps folding the
+delta back under that live traffic?
+
+Two phases, merged into ``BENCH_serving.json`` under ``"serving_mixed"``:
+
+- **soak** (deterministic, untimed): a seeded insert/delete/query stream
+  long enough to cross >= 2 incremental compaction cycles, answered by the
+  LSM index and by a plain MultiTableIndex replaying the same stream.
+  Bit-parity on both backends (probe + fused scan) is a refusal gate —
+  no numbers are reported for an index that changes answers — and the
+  post-compaction recall gauge must equal the recall of a FRESH monolithic
+  build over the surviving rows (compaction must not cost recall).
+- **timed rows**: an open-loop merged Poisson stream of queries and insert
+  bursts (plus periodic deletes) through AsyncHashQueryService — writes
+  ride the same queue as queries (submit order preserved, see
+  async_service) — with per-request latency taken from future completion
+  times.  Reported per row: sustained query QPS concurrent with insert
+  rows/s, latency percentiles, the max single-query pause (the
+  bounded-pause claim, measured across however many compaction cycles the
+  run crossed), and the shed count.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.core.indexer import IndexConfig
+from repro.data.synthetic import tiny1m_like
+from repro.serving.lsm import _pow2_at_least
+from repro.serving import (AsyncHashQueryService, LSMMultiTableIndex,
+                           MultiTableIndex, QueueFullError)
+from repro.utils.trajectory import merge_into_json
+
+
+def _cfg(bits: int, tables: int, batch: int, **kw) -> IndexConfig:
+    kw.setdefault("lsm_delta_min", 256)
+    kw.setdefault("lsm_delta_threshold", 0.25)
+    kw.setdefault("lsm_step_rows", 1024)
+    return IndexConfig(method="bh", bits=bits, tables=tables, batch=batch,
+                       **kw)
+
+
+def _recall_at(index, ws: np.ndarray, x_live: np.ndarray, scan_l: int,
+               top: int = 20) -> float:
+    """Fraction of queries whose scan answer lands in the true margin
+    top-``top`` of the live rows (the serving_scan.py gauge)."""
+    res = index.query_scan_batch(ws, l=scan_l)
+    hit = 0
+    for b in range(ws.shape[0]):
+        m = np.abs(x_live @ ws[b]) / np.linalg.norm(ws[b])
+        if res.nonempty[b] and (m < res.margins[b] - 1e-12).sum() < top:
+            hit += 1
+    return hit / ws.shape[0]
+
+
+def soak(n: int, d: int, bits: int, tables: int, steps: int,
+         insert_rows: int, seed: int = 0) -> dict:
+    """Deterministic mixed soak: LSM vs monolithic replay, both backends,
+    crossing >= 2 incremental compaction cycles."""
+    corpus = tiny1m_like(n_labeled=n, n_unlabeled=0, d=d, classes=10,
+                         seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    ws = rng.normal(size=(16, corpus.x.shape[1])).astype(np.float32)
+    # delta-min-driven compaction trigger (threshold tiny) so a short soak
+    # reliably crosses multiple cycles even as the base grows
+    kw = dict(lsm_delta_min=insert_rows, lsm_delta_threshold=0.02,
+              lsm_step_rows=max(n // 4, 256))
+    lsm = LSMMultiTableIndex(_cfg(bits, tables, 32, **kw)).fit(corpus.x)
+    mono = MultiTableIndex(_cfg(bits, tables, 32, **kw)).fit(corpus.x)
+    live = list(range(n))
+    parity_ok = True
+    for step in range(steps):
+        xa = rng.normal(size=(insert_rows,
+                              corpus.x.shape[1])).astype(np.float32)
+        ia = lsm.insert(xa)
+        mono.insert(xa)
+        live.extend(ia)
+        if step % 3 == 2:
+            kill = rng.choice(len(live), size=max(insert_rows // 8, 1),
+                              replace=False)
+            dead = np.sort(np.asarray([live[i] for i in kill],
+                                      dtype=np.int64))
+            lsm.delete(dead)
+            mono.delete(dead)
+            keep = set(kill)
+            live = [v for i, v in enumerate(live) if i not in keep]
+        a = lsm.query_scan_batch(ws, l=16, topk=3)
+        b = mono.query_scan_batch(ws, l=16, topk=3)
+        parity_ok &= (np.array_equal(a.ids, b.ids)
+                      and np.array_equal(a.margins, b.margins)
+                      and np.array_equal(a.ids_topk, b.ids_topk))
+        pa = lsm.query_batch(ws)
+        pb = mono.query_batch(ws)
+        parity_ok &= (np.array_equal(pa.ids, pb.ids)
+                      and np.array_equal(pa.margins, pb.margins))
+    # post-compaction recall must equal a fresh build over the survivors
+    x_live = lsm.x_np[lsm.active]
+    recall_post = _recall_at(lsm, ws, x_live, scan_l=128)
+    fresh = MultiTableIndex(_cfg(bits, tables, 32, **kw)).fit(x_live)
+    recall_fresh = _recall_at(fresh, ws, x_live, scan_l=128)
+    return {
+        "parity_ok": bool(parity_ok),
+        "compactions": int(lsm.compactions),
+        "compaction_steps": int(lsm.compaction_steps),
+        "rows_final": int(lsm.stats()["rows"]),
+        "recall_post": recall_post,
+        "recall_fresh": recall_fresh,
+    }
+
+
+def drive_mixed(service: AsyncHashQueryService, ws_pool: np.ndarray,
+                query_hz: float, insert_hz: float, insert_rows: int,
+                duration_s: float, d: int, delete_every: int = 8,
+                seed: int = 0) -> dict:
+    """Offer one merged open-loop Poisson stream of queries and insert
+    bursts (every ``delete_every``-th write is a delete of earlier
+    inserts); block until every admitted request completes.  Per-request
+    latency comes from future completion timestamps (done-callbacks), so
+    queueing + any compaction pause both land in the percentiles."""
+    rng = np.random.default_rng(seed)
+    events = []   # (arrival_s, kind)
+    for kind, hz in (("query", query_hz), ("insert", insert_hz)):
+        t, n_max = 0.0, int(duration_s * hz * 2) + 8
+        for a in np.cumsum(rng.exponential(1.0 / hz, n_max)):
+            if a > duration_s:
+                break
+            events.append((a, kind))
+    events.sort()
+    q_lat: list[float] = []
+    w_lat: list[float] = []
+    pending = []
+    shed = 0
+    n_writes = 0
+    inserted_total = [0]
+    # insert-id batches whose futures already resolved (the flush thread
+    # appends via done-callback; deque ops are atomic) — deletes draw from
+    # here so they only ever reference ids known to exist
+    resolved_ids: deque = deque()
+    t0 = time.perf_counter()
+
+    def _done_cb(t_submit, sink):
+        def cb(fut):
+            if fut.exception() is None:
+                sink.append(time.perf_counter() - t_submit)
+        return cb
+
+    def _ins_cb(fut):
+        if fut.exception() is None:
+            ids = fut.result()
+            inserted_total[0] += ids.size
+            resolved_ids.append(ids)
+
+    for arrival, kind in events:
+        dt = t0 + arrival - time.perf_counter()
+        if dt > 0:
+            time.sleep(dt)
+        try:
+            if kind == "query":
+                t_sub = time.perf_counter()
+                f = service.submit(ws_pool[len(q_lat) % len(ws_pool)])
+                f.add_done_callback(_done_cb(t_sub, q_lat))
+            else:
+                n_writes += 1
+                t_sub = time.perf_counter()
+                if n_writes % delete_every == 0 and resolved_ids:
+                    ids = resolved_ids.popleft()
+                    f = service.submit_delete(ids[: max(ids.size // 2, 1)])
+                else:
+                    xa = rng.normal(size=(insert_rows, d)).astype(np.float32)
+                    f = service.submit_insert(xa)
+                    f.add_done_callback(_ins_cb)
+                f.add_done_callback(_done_cb(t_sub, w_lat))
+            pending.append(f)
+        except QueueFullError:
+            shed += 1
+    for f in pending:
+        try:
+            f.result()
+        except Exception:
+            pass
+    elapsed = time.perf_counter() - t0
+    lat = np.asarray(q_lat) if q_lat else np.zeros(1)
+    return {
+        "offered": len(events),
+        "completed": len(q_lat) + len(w_lat),
+        "shed": shed,
+        "elapsed_s": elapsed,
+        "query_qps": len(q_lat) / elapsed,
+        "insert_rows_per_s": inserted_total[0] / elapsed,
+        "p50_ms": 1e3 * float(np.quantile(lat, 0.50)),
+        "p95_ms": 1e3 * float(np.quantile(lat, 0.95)),
+        "p99_ms": 1e3 * float(np.quantile(lat, 0.99)),
+        "max_pause_ms": 1e3 * float(lat.max()),
+    }
+
+
+def run(json_path: str | None = None, n: int = 20000, d: int = 64,
+        bits: int = 18, tables: int = 2, max_batch: int = 32,
+        duration_s: float = 3.0, query_hz: float = 400.0,
+        insert_hz: float = 40.0, insert_rows: int = 64,
+        soak_steps: int = 12, smoke: bool = False) -> dict:
+    if smoke:
+        n, duration_s, soak_steps = 4000, 1.0, 10
+        query_hz, insert_hz, insert_rows = 200.0, 25.0, 48
+    print("# soak: mixed stream parity + recall vs fresh build")
+    t0 = time.perf_counter()
+    soak_rec = soak(n=min(n, 4000), d=d, bits=bits, tables=tables,
+                    steps=soak_steps, insert_rows=max(insert_rows * 4, 192))
+    print(f"# soak: parity_ok={soak_rec['parity_ok']} "
+          f"compactions={soak_rec['compactions']} "
+          f"recall_post={soak_rec['recall_post']:.2f} "
+          f"recall_fresh={soak_rec['recall_fresh']:.2f} "
+          f"({time.perf_counter() - t0:.1f}s)")
+
+    corpus = tiny1m_like(n_labeled=n, n_unlabeled=0, d=d, classes=10)
+    dd = corpus.x.shape[1]
+    rng = np.random.default_rng(0)
+    ws_pool = rng.normal(size=(64, dd)).astype(np.float32)
+    rows = []
+    print("backend,query_qps,insert_rows_per_s,p50_ms,p95_ms,p99_ms,"
+          "max_pause_ms,shed,compactions")
+    for mode, scan_l in (("scan", 32), ("probe", 32)):
+        # low delta threshold so the timed window actually crosses
+        # compactions under live traffic (the whole point of the gauge)
+        cfg = _cfg(bits, tables, max_batch,
+                   lsm_delta_min=max(insert_rows * 4, 256),
+                   lsm_delta_threshold=0.05,
+                   lsm_step_rows=max(n // 8, 512))
+        index = LSMMultiTableIndex(cfg).fit(corpus.x)
+        svc = AsyncHashQueryService(index, max_batch=max_batch,
+                                    deadline_ms=2.0, max_queue=8 * max_batch,
+                                    mode=mode, cache_size=0, scan_l=scan_l)
+        # warm every jit regime the stream will traverse.  The async batcher
+        # pads flushes to power-of-two buckets, so each (batch bucket x
+        # delta bucket) pair is its own trace: sweep ALL batch buckets at
+        # base-only, at each delta pad bucket up to the compaction trigger,
+        # and across a full compaction cycle (which settles the post-swap
+        # base bucket) — the timed stream then measures serving, not
+        # first-compile stalls.
+        def _warm():
+            b = 1
+            while b <= max_batch:
+                svc.service.query_batch(ws_pool[:b])
+                b *= 2
+
+        _warm()                                    # pre-compact base regime
+        # settle the base into its steady (sticky) pad bucket first — one
+        # full fill->compact cycle — THEN sweep the delta pad buckets at
+        # that bucket, so every trace the timed stream hits is warm
+        while not index.stats()["compaction_active"]:
+            index.insert(
+                rng.normal(size=(insert_rows, dd)).astype(np.float32))
+        index.compact()
+        _warm()                                    # steady base bucket
+        trigger = max(cfg.lsm_delta_min,
+                      int(cfg.lsm_delta_threshold * index.stats()["rows"]))
+        warmed = set()
+        while (index.stats()["delta_rows"] <= trigger
+               and not index.stats()["compaction_active"]):
+            index.insert(
+                rng.normal(size=(insert_rows, dd)).astype(np.float32))
+            b = _pow2_at_least(index.stats()["delta_rows"],
+                               index._delta_floor)
+            if b not in warmed:
+                warmed.add(b)
+                _warm()
+        index.compact()
+        _warm()                                    # post-swap, empty delta
+        c0 = index.compactions
+        load = drive_mixed(svc, ws_pool, query_hz, insert_hz, insert_rows,
+                           duration_s, dd, seed=42)
+        svc.close()
+        row = {
+            "backend": mode,
+            "query_hz": query_hz,
+            "insert_hz": insert_hz,
+            "insert_rows": insert_rows,
+            "compactions_crossed": index.compactions - c0,
+            "index": {k: index.stats()[k]
+                      for k in ("rows", "n", "base_rows", "delta_rows",
+                                "device_uploads", "scan_state_rebuilds",
+                                "compaction_steps", "delta_uploads")},
+            **load,
+        }
+        rows.append(row)
+        print(f"{mode},{load['query_qps']:.0f},"
+              f"{load['insert_rows_per_s']:.0f},{load['p50_ms']:.2f},"
+              f"{load['p95_ms']:.2f},{load['p99_ms']:.2f},"
+              f"{load['max_pause_ms']:.1f},{load['shed']},"
+              f"{row['compactions_crossed']}")
+
+    record = {
+        "config": {"n": n, "d": d, "bits": bits, "tables": tables,
+                   "max_batch": max_batch, "duration_s": duration_s,
+                   "smoke": smoke},
+        "soak": soak_rec,
+        "rows": rows,
+    }
+    if json_path:
+        merge_into_json(json_path, {"serving_mixed": record})
+        print(f"# merged serving_mixed into {json_path}")
+    return record
+
+
+if __name__ == "__main__":
+    import sys
+    paths = [a for a in sys.argv[1:] if not a.startswith("--")]
+    run(json_path=paths[0] if paths else None, smoke="--smoke" in sys.argv)

@@ -35,6 +35,23 @@ class IndexConfig:
     # auto-compact the multi-table index once this fraction of rows is
     # tombstoned (None = never; delete churn then grows tables forever)
     compact_threshold: float | None = 0.5
+    # LSM delta-index knobs (serving.lsm.LSMMultiTableIndex): streaming
+    # ingest splits the index into an immutable device-resident base plus
+    # a small mutable delta absorbing inserts, folded back incrementally.
+    lsm_step_rows: int = 4096          # max source rows folded per
+                                       # incremental compaction step (the
+                                       # bounded-pause unit)
+    lsm_delta_threshold: float = 0.5   # begin folding once the delta
+                                       # exceeds this fraction of the base…
+    lsm_delta_min: int = 1024          # …and at least this many rows
+                                       # (avoids thrashing tiny indexes)
+    lsm_delta_fused_rows: int = 4096   # delta scans stay pure-jnp below
+                                       # this many rows; past it they route
+                                       # through the fused kernel like the
+                                       # base (see kernels/README.md)
+    lsm_auto: bool = True              # piggyback compaction begin/step on
+                                       # insert/delete/query calls (False =
+                                       # only compact()/start_compactor())
     # LBH learning
     lbh_sample: int = 1000
     lbh_steps: int = 150

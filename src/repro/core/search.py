@@ -103,7 +103,8 @@ def hamming_topk_batch(codes, queries, l: int):
     return _pad_topk(-neg, idx, l)
 
 
-def hamming_topk_grouped(codes, queries, l: int, select: str | None = None):
+def hamming_topk_grouped(codes, queries, l: int, select: str | None = None,
+                         active=None):
     """Grouped scan, pure-jnp: group g's queries vs group g's codes only.
 
     Same contract as kernels.ops.hamming_topk_grouped (the Pallas fused
@@ -115,23 +116,34 @@ def hamming_topk_grouped(codes, queries, l: int, select: str | None = None):
     select: ``"hist"`` (default, env-overridable via REPRO_FUSED_SELECT)
     routes through the counting-sort reference ``hamming_topk_grouped_hist``;
     ``"argmin"`` keeps the legacy lax.top_k selection.  Bit-identical.
+
+    active: optional (n,) bool liveness flags shared by all G groups —
+    False rows (tombstones / device padding) rank at the sentinel, so the
+    result is the top-l of the live rows alone with (DIST_SENTINEL, -1) in
+    impossible slots.  Traced (not a jit key): mutable-index serving flips
+    tombstones without retracing the scan.
     """
     if env_fused_select(select) == "hist":
-        return hamming_topk_grouped_hist(codes, queries, l)
-    return _grouped_topk_lax(codes, queries, l)
+        return hamming_topk_grouped_hist(codes, queries, l, active)
+    return _grouped_topk_lax(codes, queries, l, active)
 
 
 @partial(jax.jit, static_argnames=("l",))
-def _grouped_topk_lax(codes, queries, l: int):
+def _grouped_topk_lax(codes, queries, l: int, active=None):
     """Legacy grouped selection: full distance matrix + lax.top_k."""
     g, n, w = codes.shape
     d = hamming_packed(codes[:, None, :, :], queries[:, :, None, :])  # G,B,n
+    if active is not None:
+        d = jnp.where(active[None, None, :], d, jnp.int32(DIST_SENTINEL))
     neg, idx = jax.lax.top_k(-d, min(l, n))
-    return _pad_topk(-neg, idx, l)
+    d, i = _pad_topk(-neg, idx, l)
+    if active is not None:
+        i = jnp.where(d >= DIST_SENTINEL, jnp.int32(-1), i)
+    return d, i
 
 
 @partial(jax.jit, static_argnames=("l",))
-def hamming_topk_grouped_hist(codes, queries, l: int):
+def hamming_topk_grouped_hist(codes, queries, l: int, active=None):
     """Pure-jnp reference of the two-pass histogram (counting-sort) select
     the Pallas kernel ``hamming_topk_hist_kernel`` runs per block — here
     over the whole row axis at once.  Bit-identical to the lax.top_k path
@@ -148,6 +160,12 @@ def hamming_topk_grouped_hist(codes, queries, l: int):
     g, n, w = codes.shape
     b = queries.shape[1]
     d = hamming_packed(codes[:, None, :, :], queries[:, :, None, :])  # G,B,n
+    if active is not None:
+        # masked rows (tombstones / padding) sit at the sentinel: they can
+        # never reach the cutoff radius (r <= max_dist < sentinel), so when
+        # fewer than t live rows exist the spare slots keep their
+        # (DIST_SENTINEL, -1) initializers — the l > n contract exactly
+        d = jnp.where(active[None, None, :], d, jnp.int32(DIST_SENTINEL))
     t = min(l, n)
     max_dist = 32 * w
     lo = jnp.zeros((g, b, 1), jnp.int32)
@@ -174,6 +192,59 @@ def hamming_topk_grouped_hist(codes, queries, l: int):
     out_i = out_i.at[gi, bi, slot].set(ids, mode="drop")[..., :t]
     out_d, out_i = jax.lax.sort((out_d, out_i), dimension=2, num_keys=2)
     return _pad_topk(out_d, out_i, l)
+
+
+# -- two-segment (LSM base+delta) merge contract -----------------------------
+#
+# serving.lsm.LSMMultiTableIndex stores the index as an immutable base
+# segment plus a small mutable delta segment.  Each segment is scanned
+# independently (fused kernel / pure jnp — any of the bit-identical scan
+# paths) and the per-(group, query) candidate lists are combined here.  The
+# contract that makes the merged answer bit-identical to a monolithic scan:
+# ids must be globally comparable (the LSM row space keeps row order ==
+# stable-id order), sentinel slots are (DIST_SENTINEL, -1), and tombstoned
+# rows never reach the top-l — on a single device via the scans' traced
+# ``active`` mask (dead rows rank at the sentinel inside selection), on the
+# sharded path via the slack rule: scan l + (#tombstones) deep, then
+# ``drop_tombstones_topk`` — at most #tombstones of the kept slots can be
+# dead, which makes the surviving top-l exactly the top-l of the live rows.
+
+
+@partial(jax.jit, static_argnames=("l",))
+def merge_topk_segments(d_a, i_a, d_b, i_b, l: int):
+    """Lexicographic (dist, id) merge of two per-(group, query) top-k lists.
+
+    d_*/i_* : (..., l_a) and (..., l_b) candidate lists, each already
+    sorted ascending by (distance, id) with (DIST_SENTINEL, -1) sentinels
+    in impossible slots.  Ids must share one id space (the caller offsets
+    segment-local ids first).  Returns the combined top-l, sorted by the
+    same (distance, id) order — exactly what a single scan over the
+    concatenated segments would produce, because real distances never
+    reach DIST_SENTINEL, so sentinels sort last.
+    """
+    d = jnp.concatenate([d_a, d_b], axis=-1)
+    i = jnp.concatenate([i_a, i_b], axis=-1)
+    d, i = jax.lax.sort((d, i), dimension=d.ndim - 1, num_keys=2)
+    return _pad_topk(d[..., :l], i[..., :l], l)
+
+
+@partial(jax.jit, static_argnames=("l",))
+def drop_tombstones_topk(dists, ids, active, l: int):
+    """Filter a lex-sorted candidate list down to its top-l LIVE entries.
+
+    active: (n_seg,) bool over the segment's local id space — False rows
+    (tombstones, or padding rows past the segment's true length) are
+    replaced with (DIST_SENTINEL, -1) and sorted out.  The slack contract:
+    the input must be at least ``l + (#inactive rows)`` deep (or cover the
+    whole segment) for the result to equal the top-l of the live rows
+    alone — at most #inactive of the scanned slots can be dead, so l live
+    candidates survive and they are exactly the live top-l.
+    """
+    ok = (ids >= 0) & active[jnp.clip(ids, 0, active.shape[0] - 1)]
+    d = jnp.where(ok, dists, jnp.int32(DIST_SENTINEL))
+    i = jnp.where(ok, ids, jnp.int32(-1))
+    d, i = jax.lax.sort((d, i), dimension=d.ndim - 1, num_keys=2)
+    return _pad_topk(d[..., :l], i[..., :l], l)
 
 
 def _local_then_merge(codes_shard, query, l: int, axis: str,
@@ -354,6 +425,35 @@ def margin_rerank_batch(x, w_batch, candidates, valid, l: int):
     # independent of B and C, so batched answers are bit-identical to the
     # same queries issued one at a time (candidate lists are short — the
     # VPU path costs nothing over the MXU here).
+    m = jnp.abs(jnp.sum(cx * w_batch[:, None, :], axis=-1))
+    m = m / jnp.maximum(jnp.linalg.norm(w_batch, axis=1, keepdims=True), 1e-12)
+    m = jnp.where(valid, m, jnp.inf)
+    neg, sel = jax.lax.top_k(-m, min(l, candidates.shape[1]))
+    return -neg, jnp.take_along_axis(candidates, sel, axis=1)
+
+
+@partial(jax.jit, static_argnames=("l",))
+def margin_rerank_segmented(base_x, delta_x, split, w_batch, candidates,
+                            valid, l: int):
+    """``margin_rerank_batch`` over a row space stored as two segments.
+
+    Rows < ``split`` gather from ``base_x`` (the LSM index's immutable,
+    device-resident base — uploaded once per compaction cycle, never per
+    insert), rows >= split from ``delta_x`` at offset row - split.  Both
+    arrays may carry padding rows past their true lengths (never selected:
+    ``valid`` is False wherever candidates point past the real data).
+    ``split`` is a traced scalar, so the jit cache is keyed only by the
+    (padded, power-of-two-bucketed) array shapes, not by where the
+    base/delta boundary happens to sit.
+
+    Bit-identical to margin_rerank_batch on the concatenation
+    [base_x[:split]; delta_x[:rows-split]]: the two clipped gathers + where
+    produce the same cx rows, and the margin math is the same expression.
+    """
+    is_base = candidates < split
+    cb = base_x[jnp.clip(candidates, 0, base_x.shape[0] - 1)]
+    cd = delta_x[jnp.clip(candidates - split, 0, delta_x.shape[0] - 1)]
+    cx = jnp.where(is_base[..., None], cb, cd)
     m = jnp.abs(jnp.sum(cx * w_batch[:, None, :], axis=-1))
     m = m / jnp.maximum(jnp.linalg.norm(w_batch, axis=1, keepdims=True), 1e-12)
     m = jnp.where(valid, m, jnp.inf)

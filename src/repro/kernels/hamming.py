@@ -102,8 +102,8 @@ def _batch_kernel(codes_ref, queries_ref, out_ref, *, n_words: int):
     out_ref[...] = _popcount_tile(codes_ref[...], queries_ref[...], n_words)
 
 
-def _topk_fused_kernel(codes_ref, queries_ref, out_d_ref, out_i_ref, acc_ref,
-                       *, n_words: int, l: int, block_n: int, n_valid: int):
+def _topk_fused_kernel(*refs, n_words: int, l: int, block_n: int,
+                       n_valid: int, masked: bool = False):
     """One grid step: scan a (block_n, W) code tile against this group's B
     queries and emit the block-local smallest-l (distance, row-id) pairs.
 
@@ -111,7 +111,16 @@ def _topk_fused_kernel(codes_ref, queries_ref, out_d_ref, out_i_ref, acc_ref,
     — it is never written to HBM.  Selection is l rounds of masked argmin;
     ``jnp.min`` over the row-iota of the minima keeps ties deterministic
     (lowest row index wins), matching lax.top_k's stable order.
+
+    masked=True threads an extra (block_n, 1) int32 activity tile: rows
+    whose flag is 0 (tombstones / pad) go to the sentinel before selection,
+    exactly like rows past n_valid.
     """
+    if masked:
+        (codes_ref, queries_ref, act_ref,
+         out_d_ref, out_i_ref, acc_ref) = refs
+    else:
+        codes_ref, queries_ref, out_d_ref, out_i_ref, acc_ref = refs
     # (block_n, W) codes vs this group's (B, W) queries, word-by-word XOR
     # on 2-D (BN, B) lanes — the natural VPU layout.
     acc = _popcount_tile(codes_ref[0], queries_ref[0], n_words)
@@ -121,6 +130,8 @@ def _topk_fused_kernel(codes_ref, queries_ref, out_d_ref, out_i_ref, acc_ref,
     base = block_in_group * block_n
     rows = jax.lax.broadcasted_iota(jnp.int32, acc.shape, 0)
     acc = jnp.where(base + rows >= n_valid, jnp.int32(DIST_SENTINEL), acc)
+    if masked:
+        acc = jnp.where(act_ref[...] > 0, acc, jnp.int32(DIST_SENTINEL))
     acc_ref[...] = acc
     big_row = jnp.int32(jnp.iinfo(jnp.int32).max)
 
@@ -141,7 +152,8 @@ def _topk_fused_kernel(codes_ref, queries_ref, out_d_ref, out_i_ref, acc_ref,
 @functools.partial(jax.jit, static_argnames=("l", "n_valid", "block_n",
                                              "interpret"))
 def hamming_topk_fused_kernel(codes, queries, l: int, n_valid: int, *,
-                              block_n: int = 2048, interpret: bool = False):
+                              active=None, block_n: int = 2048,
+                              interpret: bool = False):
     """Fused scan+select over G stacked code groups in ONE device launch.
 
     codes: (G, n_pad, W) uint32 with n_pad % block_n == 0; queries:
@@ -149,19 +161,30 @@ def hamming_topk_fused_kernel(codes, queries, l: int, n_valid: int, *,
     padding).  Returns (dists, ids): (G, grid, B, l) int32 block-local
     candidates, ids group-local in [0, n_pad); masked slots carry
     DIST_SENTINEL.  l must satisfy l <= block_n.
+
+    active: optional (n_pad, 1) int32 per-row activity flags, shared by all
+    G groups; rows with flag 0 are masked to the sentinel before selection.
+    A TRACED operand (its value is not a jit key), so mutable-index serving
+    can flip tombstones without recompiling the scan.
     """
     g, n_pad, w = codes.shape
     b = queries.shape[1]
     grid_n = n_pad // block_n
     out_shape = jax.ShapeDtypeStruct((g, grid_n, b, l), jnp.int32)
+    in_specs = [
+        pl.BlockSpec((1, block_n, w), lambda t, i: (t, i, 0)),
+        pl.BlockSpec((1, b, w), lambda t, i: (t, 0, 0)),
+    ]
+    operands = [codes, queries]
+    if active is not None:
+        in_specs.append(pl.BlockSpec((block_n, 1), lambda t, i: (i, 0)))
+        operands.append(active)
     return pl.pallas_call(
         functools.partial(_topk_fused_kernel, n_words=w, l=l,
-                          block_n=block_n, n_valid=n_valid),
+                          block_n=block_n, n_valid=n_valid,
+                          masked=active is not None),
         grid=(g, grid_n),
-        in_specs=[
-            pl.BlockSpec((1, block_n, w), lambda t, i: (t, i, 0)),
-            pl.BlockSpec((1, b, w), lambda t, i: (t, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, b, l), lambda t, i: (t, i, 0, 0)),
             pl.BlockSpec((1, 1, b, l), lambda t, i: (t, i, 0, 0)),
@@ -171,7 +194,7 @@ def hamming_topk_fused_kernel(codes, queries, l: int, n_valid: int, *,
         compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
-    )(codes, queries)
+    )(*operands)
 
 
 def _popcount_tile(codes, queries, n_words: int):
@@ -185,7 +208,7 @@ def _popcount_tile(codes, queries, n_words: int):
 
 
 def _hist_select(acc, base, l: int, n_valid: int, max_dist: int,
-                 block_n: int):
+                 block_n: int, act=None):
     """Two-pass counting-sort select over one (block_n, B) distance tile.
 
     Pass 1 finds, per query, the cutoff radius r_b = the smallest distance
@@ -211,7 +234,15 @@ def _hist_select(acc, base, l: int, n_valid: int, max_dist: int,
     acc = jnp.where(base + rows >= n_valid, jnp.int32(DIST_SENTINEL), acc)
     b = acc.shape[1]
     # live rows in this block; also the per-query selection target t <= l.
-    t = jnp.minimum(jnp.clip(n_valid - base, 0, block_n), l)  # scalar
+    if act is None:
+        t = jnp.minimum(jnp.clip(n_valid - base, 0, block_n), l)  # scalar
+    else:
+        # activity flags (tombstones / pad) shrink the live count further;
+        # traced, so flipping a tombstone never recompiles the select
+        ri = jax.lax.broadcasted_iota(jnp.int32, act.shape, 0)
+        live = (act > 0) & (base + ri < n_valid)          # (block_n, 1)
+        acc = jnp.where(live, acc, jnp.int32(DIST_SENTINEL))
+        t = jnp.minimum(jnp.sum(live.astype(jnp.int32)), l)
 
     # -- pass 1: cutoff radius per query via bisection on the distance CDF.
     # invariant: count(acc <= hi) >= t (true at hi = max_dist: every live
@@ -249,22 +280,29 @@ def _hist_select(acc, base, l: int, n_valid: int, max_dist: int,
     return out_d.T, (base + hi2).T                            # (B, l) each
 
 
-def _topk_hist_kernel(codes_ref, queries_ref, out_d_ref, out_i_ref, *,
-                      n_words: int, l: int, block_n: int, n_valid: int,
-                      max_dist: int):
+def _topk_hist_kernel(*refs, n_words: int, l: int, block_n: int,
+                      n_valid: int, max_dist: int, masked: bool = False):
     """One grid step of the histogram-select fused scan (BlockSpec-streamed
-    code tiles; see _topk_hist_dma_kernel for the manual-DMA variant)."""
+    code tiles; see _topk_hist_dma_kernel for the manual-DMA variant).
+    masked=True threads a (block_n, 1) int32 activity tile into the select
+    (rows with flag 0 rank at the sentinel)."""
+    if masked:
+        codes_ref, queries_ref, act_ref, out_d_ref, out_i_ref = refs
+        act = act_ref[...]
+    else:
+        codes_ref, queries_ref, out_d_ref, out_i_ref = refs
+        act = None
     acc = _popcount_tile(codes_ref[0], queries_ref[0], n_words)
     base = pl.program_id(1) * block_n
-    out_d, out_i = _hist_select(acc, base, l, n_valid, max_dist, block_n)
+    out_d, out_i = _hist_select(acc, base, l, n_valid, max_dist, block_n,
+                                act)
     out_d_ref[0, 0] = out_d
     out_i_ref[0, 0] = out_i
 
 
-def _topk_hist_dma_kernel(codes_hbm_ref, queries_ref, out_d_ref, out_i_ref,
-                          buf_ref, sem_ref, *, n_words: int, l: int,
+def _topk_hist_dma_kernel(*refs, n_words: int, l: int,
                           block_n: int, n_valid: int, max_dist: int,
-                          grid_n: int):
+                          grid_n: int, masked: bool = False):
     """Histogram-select step with a double-buffered HBM→VMEM code pipeline.
 
     The code stack stays in HBM (memory_space=ANY); each sequential step of
@@ -275,6 +313,14 @@ def _topk_hist_dma_kernel(codes_hbm_ref, queries_ref, out_d_ref, out_i_ref,
     ("arbitrary", "arbitrary"), i.e. sequential), which is what carries the
     in-flight copy across the step boundary.
     """
+    if masked:
+        (codes_hbm_ref, queries_ref, act_ref,
+         out_d_ref, out_i_ref, buf_ref, sem_ref) = refs
+        act = act_ref[...]
+    else:
+        (codes_hbm_ref, queries_ref,
+         out_d_ref, out_i_ref, buf_ref, sem_ref) = refs
+        act = None
     t, i = pl.program_id(0), pl.program_id(1)
     step = t * grid_n + i                  # linear position in the grid
     n_steps = pl.num_programs(0) * grid_n
@@ -300,7 +346,7 @@ def _topk_hist_dma_kernel(codes_hbm_ref, queries_ref, out_d_ref, out_i_ref,
     copy_tile(slot, t, i).wait()
     acc = _popcount_tile(buf_ref[slot], queries_ref[0], n_words)
     out_d, out_i = _hist_select(acc, i * block_n, l, n_valid, max_dist,
-                                block_n)
+                                block_n, act)
     out_d_ref[0, 0] = out_d
     out_i_ref[0, 0] = out_i
 
@@ -308,8 +354,8 @@ def _topk_hist_dma_kernel(codes_hbm_ref, queries_ref, out_d_ref, out_i_ref,
 @functools.partial(jax.jit, static_argnames=("l", "n_valid", "block_n",
                                              "interpret", "dma"))
 def hamming_topk_hist_kernel(codes, queries, l: int, n_valid: int, *,
-                             block_n: int = 2048, interpret: bool = False,
-                             dma: bool = False):
+                             active=None, block_n: int = 2048,
+                             interpret: bool = False, dma: bool = False):
     """Histogram-select fused scan: same shapes, grid and block-local
     candidate contract as ``hamming_topk_fused_kernel`` (masked slots carry
     DIST_SENTINEL; each block's l slots hold the exact block-local
@@ -322,6 +368,10 @@ def hamming_topk_hist_kernel(codes, queries, l: int, n_valid: int, *,
     dma=True streams code tiles through the manually double-buffered async
     copy pipeline (the kernel then reads ``codes`` from HBM/ANY memory
     space); dma=False uses ordinary BlockSpec streaming.  Both are exact.
+
+    active: optional (n_pad, 1) int32 per-row activity flags shared by all
+    G groups (0 = tombstone / pad -> sentinel before selection); traced, so
+    serving can flip tombstones without recompiling.
     """
     g, n_pad, w = codes.shape
     b = queries.shape[1]
@@ -332,31 +382,44 @@ def hamming_topk_hist_kernel(codes, queries, l: int, n_valid: int, *,
         pl.BlockSpec((1, 1, b, l), lambda t, i: (t, i, 0, 0)),
         pl.BlockSpec((1, 1, b, l), lambda t, i: (t, i, 0, 0)),
     ]
+    act_spec = pl.BlockSpec((block_n, 1), lambda t, i: (i, 0))
     if not dma:
+        in_specs = [
+            pl.BlockSpec((1, block_n, w), lambda t, i: (t, i, 0)),
+            pl.BlockSpec((1, b, w), lambda t, i: (t, 0, 0)),
+        ]
+        operands = [codes, queries]
+        if active is not None:
+            in_specs.append(act_spec)
+            operands.append(active)
         return pl.pallas_call(
             functools.partial(_topk_hist_kernel, n_words=w, l=l,
                               block_n=block_n, n_valid=n_valid,
-                              max_dist=max_dist),
+                              max_dist=max_dist,
+                              masked=active is not None),
             grid=(g, grid_n),
-            in_specs=[
-                pl.BlockSpec((1, block_n, w), lambda t, i: (t, i, 0)),
-                pl.BlockSpec((1, b, w), lambda t, i: (t, 0, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=out_specs,
             out_shape=[out_shape, out_shape],
             compiler_params=CompilerParams(
                 dimension_semantics=("arbitrary", "arbitrary")),
             interpret=interpret,
-        )(codes, queries)
+        )(*operands)
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.ANY),         # codes stay in HBM
+        pl.BlockSpec((1, b, w), lambda t, i: (t, 0, 0)),
+    ]
+    operands = [codes, queries]
+    if active is not None:
+        in_specs.append(act_spec)
+        operands.append(active)
     return pl.pallas_call(
         functools.partial(_topk_hist_dma_kernel, n_words=w, l=l,
                           block_n=block_n, n_valid=n_valid,
-                          max_dist=max_dist, grid_n=grid_n),
+                          max_dist=max_dist, grid_n=grid_n,
+                          masked=active is not None),
         grid=(g, grid_n),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.ANY),     # codes stay in HBM
-            pl.BlockSpec((1, b, w), lambda t, i: (t, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=[out_shape, out_shape],
         scratch_shapes=[
@@ -366,7 +429,7 @@ def hamming_topk_hist_kernel(codes, queries, l: int, n_valid: int, *,
         compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
-    )(codes, queries)
+    )(*operands)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))

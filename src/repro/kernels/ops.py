@@ -134,7 +134,8 @@ def hamming_topk_batch(codes, queries, l: int, *, block_n: int = 4096,
 
 def hamming_topk_grouped(codes, queries, l: int, *, block_n: int = 4096,
                          interpret: bool | None = None,
-                         select: str | None = None, dma: bool = False):
+                         select: str | None = None, dma: bool = False,
+                         active=None):
     """Fused smallest-l scan over G stacked code groups, ONE kernel launch.
 
     codes: (G, n, W) uint32 — G sub-tables over the same row space (the
@@ -152,16 +153,22 @@ def hamming_topk_grouped(codes, queries, l: int, *, block_n: int = 4096,
     routes the hist kernel through its manually double-buffered HBM→VMEM
     copy pipeline (TPU overlap; argmin ignores it).  All combinations are
     bit-identical — the env knob and flags only trade selection cost.
+
+    active: optional (n,) bool per-row liveness flags shared by all G
+    groups — False rows (tombstones / pad) are masked to the sentinel
+    inside selection, so the result is the top-l of the live rows alone.
+    Traced (NOT a jit key): mutable-index serving flips tombstones without
+    recompiling the scan.
     """
     select = env_fused_select(select)
-    return _topk_grouped_impl(codes, queries, l, block_n=block_n,
+    return _topk_grouped_impl(codes, queries, active, l, block_n=block_n,
                               interpret=_interpret_default(interpret),
                               select=select, dma=dma)
 
 
 @functools.partial(jax.jit, static_argnames=("l", "block_n", "interpret",
                                              "select", "dma"))
-def _topk_grouped_impl(codes, queries, l: int, *, block_n: int,
+def _topk_grouped_impl(codes, queries, active, l: int, *, block_n: int,
                        interpret: bool, select: str, dma: bool):
     g, n, w = codes.shape
     b = queries.shape[1]
@@ -169,12 +176,16 @@ def _topk_grouped_impl(codes, queries, l: int, *, block_n: int,
     padded = _pad_to(codes, 1, bn)
     q = _pad_to(queries, 1, SUBLANE)
     l_k = min(l, bn)    # a block holds bn rows; l_k = bn already emits all
+    act = None
+    if active is not None:
+        act = _pad_to(active.astype(jnp.int32)[:, None], 0, bn)
     if select == "hist":
         cd, ci = hamming_topk_hist_kernel(
-            padded, q, l_k, n, block_n=bn, interpret=interpret, dma=dma)
+            padded, q, l_k, n, active=act, block_n=bn, interpret=interpret,
+            dma=dma)
     else:
         cd, ci = hamming_topk_fused_kernel(
-            padded, q, l_k, n, block_n=bn, interpret=interpret)
+            padded, q, l_k, n, active=act, block_n=bn, interpret=interpret)
     grid_n = cd.shape[1]
     # second-stage merge over grid·l_k candidates per (group, query):
     # lexicographic (distance, id) sort keeps ties at the lowest id, exactly

@@ -1,15 +1,18 @@
 # Serving subsystem: the unit of work is a request *stream*, not a single
 # query.  MultiTableIndex keeps L independent bilinear-hash tables with
-# dynamic insert/delete; batch_query vectorizes hashing, multi-probe key
-# generation and the margin re-rank over whole batches; HashQueryService
+# dynamic insert/delete; LSMMultiTableIndex restructures it into an
+# immutable base + mutable delta for streaming ingest with incremental
+# compaction under live traffic; batch_query vectorizes hashing, multi-probe
+# key generation and the margin re-rank over whole batches; HashQueryService
 # fronts it all with micro-batching, a query-code LRU cache and QPS/latency
 # counters.  AsyncHashQueryService adds the concurrent-caller story:
-# future-per-request submit, deadline-based batch coalescing, and bounded-
-# queue admission control.
+# future-per-request submit, deadline-based batch coalescing, bounded-queue
+# admission control, and write requests interleaved with query flushes.
 from repro.serving.async_service import (AsyncHashQueryService,
                                          DeadlineBatcher, QueueFullError,
                                          ServiceClosedError)
 from repro.serving.batch_query import (batched_rerank, hash_database_all,
                                        hash_queries_all, pad_candidates)
+from repro.serving.lsm import LSMMultiTableIndex
 from repro.serving.multi_table import BatchQueryResult, MultiTableIndex
 from repro.serving.service import HashQueryService

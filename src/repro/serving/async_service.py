@@ -30,6 +30,14 @@ Requests that carry a ``mask`` (AL restricts answers to the unlabeled
 pool) are grouped by mask identity inside a flush: requests passing the
 same mask array object — the common case, C learners sharing one pool —
 still share a launch.
+
+Writes ride the same queue: ``submit_insert``/``submit_delete`` return
+futures like queries do, and the flush loop splits each taken batch into
+contiguous runs at write boundaries — queries between two writes share
+launches, writes execute alone, everything in submit order.  With an
+``serving.lsm.LSMMultiTableIndex`` underneath, that is the streaming-ingest
+serving story: inserts land in the delta, queries keep flowing, and
+incremental compaction folds the delta back without a stop-the-world pause.
 """
 from __future__ import annotations
 
@@ -56,9 +64,11 @@ class ServiceClosedError(RuntimeError):
 
 
 class _Request:
-    __slots__ = ("w", "mask", "mask_key", "t_submit", "future")
+    __slots__ = ("kind", "w", "mask", "mask_key", "t_submit", "future",
+                 "payload")
 
-    def __init__(self, w, mask, t_submit):
+    def __init__(self, w, mask, t_submit, kind: str = "query", payload=None):
+        self.kind = kind           # "query" | "insert" | "delete"
         self.w = w
         self.mask = mask
         # group key: requests answered together must share one mask.  Keyed
@@ -70,6 +80,7 @@ class _Request:
         # same array object; equal-content copies just flush separately.
         self.mask_key = None if mask is None else id(mask)
         self.t_submit = t_submit
+        self.payload = payload     # insert: (k, d) rows; delete: (k,) ids
         self.future: Future = Future()
 
 
@@ -211,6 +222,36 @@ class AsyncHashQueryService:
             self._cond.notify_all()
         return req.future
 
+    def _submit_write(self, kind: str, payload) -> Future:
+        """Enqueue a write through the same bounded queue / deadline policy
+        as queries — one FIFO stream, so a query submitted after a write
+        observes it and one submitted before does not (the flush loop
+        splits batches at write boundaries to keep that order)."""
+        with self._cond:
+            if self._closed:
+                raise ServiceClosedError("submit after close()")
+            req = _Request(None, None, self._clock(), kind=kind,
+                           payload=payload)
+            try:
+                self._batcher.offer(req, req.t_submit)
+            except QueueFullError:
+                self.shed += 1
+                raise
+            self.submitted += 1
+            self._cond.notify_all()
+        return req.future
+
+    def submit_insert(self, x_new) -> Future:
+        """Enqueue a streaming insert; resolves to the assigned stable ids
+        (np.int64 array).  Interleaves with query flushes in submit order."""
+        return self._submit_write(
+            "insert", np.atleast_2d(np.asarray(x_new, np.float32)))
+
+    def submit_delete(self, ids) -> Future:
+        """Enqueue a streaming delete (tombstone); resolves to None."""
+        return self._submit_write(
+            "delete", np.atleast_1d(np.asarray(ids, dtype=np.int64)))
+
     @property
     def pending(self) -> int:
         with self._cond:
@@ -302,42 +343,75 @@ class AsyncHashQueryService:
         return min(p, self.max_batch)
 
     def _run_batch(self, batch: list[_Request]) -> None:
-        """Answer one flushed batch: group by mask identity (same-mask
-        requests share a launch; mask-dependent answers must not mix),
-        resolve futures, record per-request latency and batch counters."""
-        groups: dict = {}
+        """Answer one flushed batch, split into contiguous runs at write
+        boundaries: consecutive queries share launches (grouped by mask
+        identity — mask-dependent answers must not mix), each write runs
+        alone between them, all in submit order — so every query sees
+        exactly the writes submitted before it.  Resolves futures, records
+        per-request latency and batch counters."""
+        runs: list[list[_Request]] = []
         for req in batch:
-            groups.setdefault(req.mask_key, []).append(req)
+            if req.kind != "query" or not runs or runs[-1][0].kind != "query":
+                runs.append([req])
+            else:
+                runs[-1].append(req)
         n_done = 0
         lats: list[float] = []
-        for reqs in groups.values():
-            # skip futures the caller cancelled while they sat in the queue
-            reqs = [r for r in reqs if r.future.set_running_or_notify_cancel()]
-            if not reqs:
+        for run in runs:
+            if run[0].kind != "query":
+                n_done += self._run_write(run[0], lats)
                 continue
-            ws = np.stack([r.w for r in reqs])
-            if self.bucket_batches:
-                pad = self._bucket(ws.shape[0]) - ws.shape[0]
-                if pad:
-                    ws = np.concatenate(
-                        [ws, np.repeat(ws[:1], pad, axis=0)])
-            try:
-                with self._service_lock:
-                    results = self.service.query_batch(ws, mask=reqs[0].mask)
-            except BaseException as e:  # resolve futures even on device error
-                for r in reqs:
-                    r.future.set_exception(e)
-                continue
-            now = self._clock()
-            for r, res in zip(reqs, results):
-                lats.append(now - r.t_submit)
-                r.future.set_result(res)
-            n_done += len(reqs)
+            groups: dict = {}
+            for req in run:
+                groups.setdefault(req.mask_key, []).append(req)
+            for reqs in groups.values():
+                # skip futures cancelled while they sat in the queue
+                reqs = [r for r in reqs
+                        if r.future.set_running_or_notify_cancel()]
+                if not reqs:
+                    continue
+                ws = np.stack([r.w for r in reqs])
+                if self.bucket_batches:
+                    pad = self._bucket(ws.shape[0]) - ws.shape[0]
+                    if pad:
+                        ws = np.concatenate(
+                            [ws, np.repeat(ws[:1], pad, axis=0)])
+                try:
+                    with self._service_lock:
+                        results = self.service.query_batch(
+                            ws, mask=reqs[0].mask)
+                except BaseException as e:  # resolve futures on device error
+                    for r in reqs:
+                        r.future.set_exception(e)
+                    continue
+                now = self._clock()
+                for r, res in zip(reqs, results):
+                    lats.append(now - r.t_submit)
+                    r.future.set_result(res)
+                n_done += len(reqs)
         with self._cond:
             self.latencies_s.extend(lats)
             self.completed += n_done
             self.flushes += 1
             self.batch_sizes[len(batch)] += 1
+
+    def _run_write(self, req: _Request, lats: list[float]) -> int:
+        """Execute one insert/delete request; returns 1 when resolved."""
+        if not req.future.set_running_or_notify_cancel():
+            return 0
+        try:
+            with self._service_lock:
+                if req.kind == "insert":
+                    out = self.service.insert(req.payload)
+                else:
+                    self.service.delete(req.payload)
+                    out = None
+        except BaseException as e:
+            req.future.set_exception(e)
+            return 0
+        lats.append(self._clock() - req.t_submit)
+        req.future.set_result(out)
+        return 1
 
     # -- counters ------------------------------------------------------------
 

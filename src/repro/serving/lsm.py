@@ -1,0 +1,838 @@
+"""LSM-style delta index: streaming ingest over an immutable base segment.
+
+``MultiTableIndex`` treats the index as monolithic: every ``insert`` does a
+full-array ``np.concatenate`` and bumps ``version``, which drops the cached
+device scan state — the next scan query re-uploads the whole stacked
+(L, n, W) code array — and ``compact()`` is a stop-the-world rebuild.  Fine
+for read-mostly serving; fatal for streaming ingest, where inserts arrive
+concurrently with query traffic.
+
+``LSMMultiTableIndex`` restructures the same index into two segments over
+one contiguous row space:
+
+- **base** — rows ``[0, base_len)``, immutable: stacked codes uploaded to
+  the device once per compaction cycle and served by the fused Pallas
+  grouped scan exactly like the monolithic index; feature rows likewise
+  device-resident.  Deletes never touch it — they tombstone (the ``active``
+  mask) and are filtered at merge time.
+- **delta** — rows ``[base_len, rows)``, mutable: append-only host buffers
+  with geometric growth absorbing inserts (amortized O(1) per row, no
+  concatenate), re-uploaded per mutation (small) and scanned per query as
+  plain jnp while below ``IndexConfig.lsm_delta_fused_rows`` (past the knob
+  it routes through the fused kernel like the base).
+
+Queries scan both segments and merge candidates through the lexicographic
+``(dist, id)`` contract (``core.search.merge_topk_segments``) — answers are
+bit-identical to a fresh monolithic index built from the same surviving
+rows, including tie order and l > n sentinels.  The invariant making that
+cheap: row order always equals stable-id order (base rows keep their
+relative order across compactions; delta ids are assigned later, hence
+larger), so sorting by (distance, row) IS sorting by (distance, id).
+
+Tombstones: deleted rows stay physically in place until compaction, so the
+scan must keep them out of the top-l.  On a single device each segment's
+liveness mask rides into the scan itself (the ``active=`` operand of
+``hamming_topk_grouped`` / ``kernels.ops.hamming_topk_grouped``): dead and
+shape-padding rows are set to the distance sentinel before selection, so
+the scan is exactly ``l`` deep and the mask is a TRACED operand — inserts,
+deletes and compaction swaps never change a jit trace key (device shapes
+stay pinned to sticky power-of-two pad buckets).  The sharded path instead
+overscans ``l + slack`` deep (slack >= tombstone count, quantized) and
+filters with ``core.search.drop_tombstones_topk`` — the slack contract:
+at most ``slack`` of the scanned slots can be dead, so the surviving
+top-l is exactly the top-l of the live rows.
+
+Incremental compaction: past the delta/dead-fraction thresholds the index
+freezes the current delta and folds base + frozen delta into a new base a
+bounded number of source rows per step (``IndexConfig.lsm_step_rows``),
+piggybacked on insert/delete/query calls (``lsm_auto``) or driven by
+``start_compactor()``'s daemon thread; new inserts keep landing in the
+still-live delta tail throughout.  Once the copy finishes, the new base is
+uploaded to the device OFF the lock (the target region is immutable by
+then), and one final bounded step swaps the segments atomically: pointer
+flips plus O(live delta) fixups under the lock, with a liveness re-check so
+rows deleted mid-compaction stay tombstoned in the new base.  Host probe
+tables are keyed by stable id, so compaction never rebuilds or invalidates
+them — only the service's version-keyed candidate cache drops, once per
+swap.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.indexer import IndexConfig
+from repro.core.search import (DIST_SENTINEL, _pad_topk, drop_tombstones_topk,
+                               hamming_topk_grouped,
+                               hamming_topk_grouped_sharded,
+                               margin_rerank_batch, margin_rerank_segmented,
+                               merge_topk_segments)
+from repro.core.tables import SingleHashTable
+from repro.serving import batch_query as bq
+from repro.serving.multi_table import BatchQueryResult, MultiTableIndex
+
+_MIN_CAP = 64   # floor for every power-of-two buffer/device-shape bucket
+
+
+def _pow2_at_least(v: int, floor: int = 1) -> int:
+    p = max(int(floor), 1)
+    while p < v:
+        p *= 2
+    return p
+
+
+def _to_l(d, i, l: int):
+    """Truncate/pad a sorted candidate list to exactly l slots."""
+    d, i = d[..., :l], i[..., :l]
+    if d.shape[-1] < l:
+        d, i = _pad_topk(d, i, l)
+    return d, i
+
+
+class _Compaction:
+    """In-flight incremental compaction: source snapshot + target buffers.
+
+    ``src_*`` are references to the buffers as of ``begin_compaction`` —
+    rows [0, src_len) (base + frozen delta) are immutable there, so the
+    copy loop reads them without the lock being held between steps even if
+    insert-growth swaps ``self._*_buf`` to larger arrays meanwhile.
+    ``src_active`` may be stale after such a swap; that only makes the copy
+    loop retain a row deleted mid-compaction — the atomic swap re-checks
+    liveness against the CURRENT mask, so such rows land tombstoned.
+    """
+    __slots__ = ("src_codes", "src_x", "src_ids", "src_active", "src_len",
+                 "tgt_codes", "tgt_x", "tgt_ids", "new_row_of",
+                 "pos", "out", "uploading")
+
+    def __init__(self, src_codes, src_x, src_ids, src_active, src_len,
+                 tgt_codes, tgt_x, tgt_ids, new_row_of):
+        self.src_codes = src_codes
+        self.src_x = src_x
+        self.src_ids = src_ids
+        self.src_active = src_active
+        self.src_len = src_len
+        self.tgt_codes = tgt_codes
+        self.tgt_x = tgt_x
+        self.tgt_ids = tgt_ids
+        self.new_row_of = new_row_of
+        self.pos = 0        # next source row to examine
+        self.out = 0        # rows copied into the target so far
+        self.uploading = False
+
+
+class LSMMultiTableIndex(MultiTableIndex):
+    """MultiTableIndex with an immutable base + mutable delta (see module
+    docstring).  Drop-in: same query/insert/delete/compact API, same
+    stable-id contract, answers bit-identical on both backends."""
+
+    def __init__(self, config: IndexConfig, tables: int | None = None):
+        super().__init__(config, tables)
+        self._lock = threading.RLock()
+        # delta device shapes never shrink below the compaction trigger
+        # floor: every delta below lsm_delta_min shares ONE pad bucket, so a
+        # full fill->compact cycle touches O(1) shape regimes instead of
+        # O(log(delta_min)) of them (each regime is a fresh jit trace)
+        self._delta_floor = _pow2_at_least(
+            max(_MIN_CAP, int(config.lsm_delta_min)))
+        # sticky base pad bucket (single-device layout): compaction swaps
+        # never shrink it, so a swap that lands in the same bucket leaves
+        # every scan/rerank trace key untouched — no post-swap recompiles
+        self._bcap = _MIN_CAP
+        # segment geometry over the unified row space: [0, base) immutable
+        # base; [base, base+frozen) frozen delta (only while a compaction is
+        # in flight); [base+frozen, rows) live delta absorbing inserts.
+        self._rows = 0
+        self._base_len = 0
+        self._frozen_len = 0
+        # growable host buffers; the parent-compat attributes (self.codes /
+        # x_np / active / ids_np / _row_of) are zero-copy views of these,
+        # refreshed after every geometry change (_refresh_views)
+        self._codes_buf: np.ndarray | None = None   # (L, cap, W) uint32
+        self._x_buf: np.ndarray | None = None       # (cap, d) f32
+        self._ids_buf: np.ndarray | None = None     # (cap,) i64
+        self._active_buf: np.ndarray | None = None  # (cap,) bool
+        self._row_of_buf: np.ndarray | None = None  # (id_cap,) i64
+        # segment versions: base changes only at a compaction swap; the base
+        # mask on base-row deletes; the delta on every insert / delta delete
+        self._base_version = 0
+        self._base_mask_version = 0
+        self._delta_version = 0
+        # device caches, keyed by the versions above
+        self._base_codes_dev = None
+        self._base_codes_key = None
+        self._base_active_dev = None
+        self._base_active_key = None
+        self._base_x_dev = None
+        self._base_x_key = None
+        self._delta_codes_dev = None
+        self._delta_x_dev = None
+        self._delta_active_dev = None
+        self._delta_key = None
+        self._x_dev_key = None          # full-copy compat `.x` property
+        # compaction machinery
+        self._c: _Compaction | None = None
+        self._compactor: threading.Thread | None = None
+        self._compactor_stop = threading.Event()
+        self.delta_uploads = 0   # small per-insert transfers (NOT the base)
+
+    # -- build ---------------------------------------------------------------
+
+    def fit(self, x, learn_key=None) -> "LSMMultiTableIndex":
+        t0 = time.perf_counter()
+        x = jnp.asarray(x, jnp.float32)
+        self.families = [self._make_family(self.table_key(t, learn_key), x)
+                         for t in range(self.num_tables)]
+        codes_all = np.asarray(bq.hash_database_all(self.families, x))
+        x_np = np.asarray(x)
+        n, d = x_np.shape
+        ll, w = self.num_tables, codes_all.shape[2]
+        with self._lock:
+            cap = _pow2_at_least(n, _MIN_CAP)
+            self._codes_buf = np.zeros((ll, cap, w), np.uint32)
+            self._codes_buf[:, :n] = codes_all
+            self._x_buf = np.zeros((cap, d), np.float32)
+            self._x_buf[:n] = x_np
+            self._ids_buf = np.zeros(cap, np.int64)
+            self._ids_buf[:n] = np.arange(n)
+            self._active_buf = np.zeros(cap, bool)
+            self._active_buf[:n] = True
+            self._row_of_buf = np.full(cap, -1, np.int64)
+            self._row_of_buf[:n] = np.arange(n)
+            self._rows, self._base_len, self._frozen_len = n, n, 0
+            self._bcap = _pow2_at_least(n, _MIN_CAP)
+            self._next_id = n
+            self._c = None
+            self.compactions = 0
+            self._refresh_views()
+            # host probe tables keyed by STABLE ID (== row at fit time, but
+            # never renumbered after): compaction leaves them untouched
+            self.tables = [SingleHashTable(codes_all[t], self.config.bits)
+                           for t in range(ll)]
+            self._base_version += 1
+            self._base_mask_version += 1
+            self._delta_version += 1
+            self.version += 1
+        self.fit_s = time.perf_counter() - t0
+        return self
+
+    def _refresh_views(self) -> None:
+        """Re-point the parent-compat attributes at the buffer prefixes.
+        Views, not copies — writes like ``self.active[rows] = False`` land
+        in the buffers, and inherited helpers (rows_to_ids / ids_to_rows /
+        mask_to_rows / n / stats) work unchanged."""
+        r = self._rows
+        self.codes = [self._codes_buf[t, :r] for t in range(self.num_tables)]
+        self.x_np = self._x_buf[:r]
+        self.active = self._active_buf[:r]
+        self.ids_np = self._ids_buf[:r]
+        self._row_of = self._row_of_buf[:self._next_id]
+
+    def _grow_rows(self, need: int) -> None:
+        if need <= self._x_buf.shape[0]:
+            return
+        cap = _pow2_at_least(need, _MIN_CAP)
+        r = self._rows
+        codes = np.zeros((self.num_tables, cap, self._codes_buf.shape[2]),
+                         np.uint32)
+        codes[:, :r] = self._codes_buf[:, :r]
+        x = np.zeros((cap, self._x_buf.shape[1]), np.float32)
+        x[:r] = self._x_buf[:r]
+        ids = np.zeros(cap, np.int64)
+        ids[:r] = self._ids_buf[:r]
+        act = np.zeros(cap, bool)
+        act[:r] = self._active_buf[:r]
+        self._codes_buf, self._x_buf = codes, x
+        self._ids_buf, self._active_buf = ids, act
+
+    def _grow_ids(self, need: int) -> None:
+        if need <= self._row_of_buf.shape[0]:
+            return
+        cap = _pow2_at_least(need, _MIN_CAP)
+        row_of = np.full(cap, -1, np.int64)
+        row_of[:self._next_id] = self._row_of_buf[:self._next_id]
+        self._row_of_buf = row_of
+
+    # -- compat: full-copy device x (NOT the serving path) -------------------
+
+    @property
+    def x(self):
+        # The LSM mutators never call _invalidate (that is the point), so
+        # the parent's cached _x_dev would go stale; key it by version.
+        # Serving reranks go through rerank_rows' segmented gather instead.
+        if self._x_dev is None or self._x_dev_key != self.version:
+            self._x_dev = jnp.asarray(self.x_np)
+            self._x_dev_key = self.version
+            self.device_uploads += 1
+        return self._x_dev
+
+    # -- dynamic updates -----------------------------------------------------
+
+    def insert(self, x_new) -> np.ndarray:
+        """Append rows to the live delta; returns the assigned stable ids.
+        O(rows inserted) amortized — no concatenate, and the base's device
+        scan state is untouched (only the small delta re-uploads)."""
+        self._require_fit("insert")
+        x_new = np.atleast_2d(np.asarray(x_new, np.float32))
+        k = x_new.shape[0]
+        if k == 0:
+            return np.empty((0,), dtype=np.int64)
+        new_codes = np.asarray(
+            bq.hash_database_all(self.families, jnp.asarray(x_new)))
+        with self._lock:
+            r0 = self._rows
+            self._grow_rows(r0 + k)
+            self._grow_ids(self._next_id + k)
+            ids = np.arange(self._next_id, self._next_id + k, dtype=np.int64)
+            self._codes_buf[:, r0:r0 + k] = new_codes
+            self._x_buf[r0:r0 + k] = x_new
+            self._ids_buf[r0:r0 + k] = ids
+            self._active_buf[r0:r0 + k] = True
+            self._row_of_buf[ids] = np.arange(r0, r0 + k, dtype=np.int64)
+            self._next_id += k
+            self._rows = r0 + k
+            self._refresh_views()
+            for t in range(self.num_tables):
+                self.tables[t].insert(new_codes[t], ids)
+            self._delta_version += 1
+            self.version += 1
+        self._maybe_compact()
+        return ids
+
+    def delete(self, ids) -> None:
+        """Tombstone rows (base rows stay physically in place until the
+        next compaction folds them out; the scan masks them to the
+        distance sentinel inside selection)."""
+        self._require_fit("delete")
+        ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+        if ids.size == 0:
+            return
+        if np.unique(ids).size != ids.size:
+            raise KeyError("duplicate ids in delete")
+        with self._lock:
+            rows = self.ids_to_rows(ids)
+            if not self.active[rows].all():
+                raise KeyError("delete of already-deleted or unknown id")
+            for t in range(self.num_tables):
+                self.tables[t].delete(ids)
+            self.active[rows] = False
+            if (rows < self._base_len).any():
+                self._base_mask_version += 1
+            if (rows >= self._base_len).any():
+                self._delta_version += 1
+            self.version += 1
+        self._maybe_compact()
+
+    # -- incremental compaction ----------------------------------------------
+
+    def _should_begin(self) -> bool:
+        # lock held by caller
+        if self.x_np is None or self._rows == 0:
+            return False
+        cfg = self.config
+        delta = self._rows - self._base_len
+        if delta >= max(cfg.lsm_delta_min,
+                        int(cfg.lsm_delta_threshold * max(self._base_len, 1))):
+            return True
+        thresh = cfg.compact_threshold
+        if thresh is None:
+            return False
+        dead = self._rows - int(self._active_buf[:self._rows].sum())
+        return dead > thresh * self._rows
+
+    def begin_compaction(self) -> bool:
+        """Freeze the delta and set up the fold of base + frozen delta into
+        a new base.  Returns False when there is nothing to fold (no delta,
+        no tombstones) or a compaction is already in flight."""
+        with self._lock:
+            if self._c is not None:
+                return False
+            src_len = self._rows
+            if src_len == 0 or (self._base_len == src_len
+                                and bool(self._active_buf[:src_len].all())):
+                return False
+            self._frozen_len = self._rows - self._base_len
+            ll, w = self.num_tables, self._codes_buf.shape[2]
+            d = self._x_buf.shape[1]
+            # headroom past src_len: the live delta appended at swap time
+            # usually fits without a grow-at-swap memcpy
+            cap = _pow2_at_least(src_len + max(src_len // 4, _MIN_CAP),
+                                 _MIN_CAP)
+            self._c = _Compaction(
+                src_codes=self._codes_buf, src_x=self._x_buf,
+                src_ids=self._ids_buf, src_active=self._active_buf,
+                src_len=src_len,
+                tgt_codes=np.zeros((ll, cap, w), np.uint32),
+                tgt_x=np.zeros((cap, d), np.float32),
+                tgt_ids=np.zeros(cap, np.int64),
+                new_row_of=np.full(max(self._next_id, 1), -1, np.int64))
+            return True
+
+    def compaction_step(self, max_rows: int | None = None) -> int:
+        """Run one bounded unit of compaction work; returns the number of
+        source rows examined (copy phase), 1 (upload / swap phase), or 0
+        (nothing in flight, or another driver owns the upload).  The copy
+        and swap phases hold the lock for O(step) work — that bound IS the
+        pause a concurrent query can observe; the single O(n) device upload
+        between them runs off-lock."""
+        with self._lock:
+            c = self._c
+            if c is None:
+                return 0
+            if c.pos < c.src_len:
+                step = int(max_rows if max_rows is not None
+                           else self.config.lsm_step_rows)
+                lo = c.pos
+                hi = min(lo + max(step, 1), c.src_len)
+                live = np.flatnonzero(c.src_active[lo:hi]) + lo
+                k = live.size
+                if k:
+                    o = c.out
+                    c.tgt_codes[:, o:o + k] = c.src_codes[:, live]
+                    c.tgt_x[o:o + k] = c.src_x[live]
+                    ids = c.src_ids[live]
+                    c.tgt_ids[o:o + k] = ids
+                    c.new_row_of[ids] = np.arange(o, o + k, dtype=np.int64)
+                    c.out = o + k
+                c.pos = hi
+                self.compaction_steps += 1
+                return hi - lo
+            if c.uploading:
+                return 0
+            c.uploading = True
+        # copy complete: rows [0, c.out) of the target are final, so the
+        # new base can cross to the device without blocking mutators
+        try:
+            dev_codes, dev_x = self._upload_new_base(c)
+        except BaseException:
+            with self._lock:
+                c.uploading = False
+            raise
+        with self._lock:
+            self._finish_swap(c, dev_codes, dev_x)
+            self.compaction_steps += 1
+        return 1
+
+    def _upload_new_base(self, c: _Compaction):
+        n_new = c.out
+        # sticky bucket: pad to at least the current base bucket so a swap
+        # landing in the same bucket leaves the scan trace keys untouched
+        # (benign off-lock read — only swaps move _bcap, one at a time)
+        bcap = max(self._bcap, _pow2_at_least(n_new, _MIN_CAP))
+        ll, w = c.tgt_codes.shape[0], c.tgt_codes.shape[2]
+        stacked = np.zeros((ll, bcap, w), np.uint32)
+        stacked[:, :n_new] = c.tgt_codes[:, :n_new]
+        xb = np.zeros((bcap, c.tgt_x.shape[1]), np.float32)
+        xb[:n_new] = c.tgt_x[:n_new]
+        return jnp.asarray(stacked), jnp.asarray(xb)
+
+    def _finish_swap(self, c: _Compaction, dev_codes, dev_x) -> None:
+        # lock held by caller.  O(live delta) copies + pointer flips.
+        live_lo = self._base_len + self._frozen_len
+        live_len = self._rows - live_lo
+        n_new = c.out
+        need = n_new + live_len
+        if c.tgt_x.shape[0] < need:
+            cap = _pow2_at_least(need, _MIN_CAP)
+            codes = np.zeros((self.num_tables, cap, c.tgt_codes.shape[2]),
+                             np.uint32)
+            codes[:, :n_new] = c.tgt_codes[:, :n_new]
+            x = np.zeros((cap, c.tgt_x.shape[1]), np.float32)
+            x[:n_new] = c.tgt_x[:n_new]
+            ids = np.zeros(cap, np.int64)
+            ids[:n_new] = c.tgt_ids[:n_new]
+            c.tgt_codes, c.tgt_x, c.tgt_ids = codes, x, ids
+        # the live delta tail stays the delta, renumbered after the new base
+        c.tgt_codes[:, n_new:need] = self._codes_buf[:, live_lo:self._rows]
+        c.tgt_x[n_new:need] = self._x_buf[live_lo:self._rows]
+        live_ids = self._ids_buf[live_lo:self._rows].copy()
+        c.tgt_ids[n_new:need] = live_ids
+        cap = c.tgt_x.shape[0]
+        active = np.zeros(cap, bool)
+        if n_new:
+            # liveness re-check against the CURRENT mask: rows deleted while
+            # the copy loop ran (possibly from a stale snapshot) stay
+            # tombstoned in the new base and fold out next cycle
+            old_rows = self._row_of[c.tgt_ids[:n_new]]
+            active[:n_new] = self._active_buf[old_rows]
+        active[n_new:need] = self._active_buf[live_lo:self._rows]
+        row_of = c.new_row_of
+        if row_of.shape[0] < self._next_id:
+            grown = np.full(_pow2_at_least(self._next_id, _MIN_CAP), -1,
+                            np.int64)
+            grown[:row_of.shape[0]] = row_of
+            row_of = grown
+        row_of[live_ids] = np.arange(n_new, need, dtype=np.int64)
+        # atomic swap: everything below is pointer assignment + version bumps
+        self._codes_buf, self._x_buf = c.tgt_codes, c.tgt_x
+        self._ids_buf, self._active_buf = c.tgt_ids, active
+        self._row_of_buf = row_of
+        self._rows, self._base_len, self._frozen_len = need, n_new, 0
+        self._refresh_views()
+        self._base_version += 1
+        self._base_mask_version += 1
+        self._delta_version += 1
+        # the freshly uploaded single-device base layout is already current
+        self._bcap = int(dev_codes.shape[1])
+        self._base_codes_dev = dev_codes
+        self._base_codes_key = (self._base_version, None)
+        self._base_x_dev = dev_x
+        self._base_x_key = self._base_version
+        self.device_uploads += 2
+        self.version += 1
+        self.compactions += 1
+        self._c = None
+
+    def compact(self) -> np.ndarray:
+        """Synchronous full compaction: begin + drive every incremental
+        step + swap.  Same contract as the parent (returns surviving stable
+        ids; no-op without a version bump when there is nothing to fold),
+        but additionally folds the delta into the base."""
+        self._require_fit("compact")
+        with self._lock:
+            started = self._c is not None or self.begin_compaction()
+            if not started:
+                return self.ids_np[self.active].copy()
+        while self._c is not None:
+            if self.compaction_step() == 0:
+                time.sleep(1e-4)   # another driver owns the upload phase
+        with self._lock:
+            return self.ids_np[self.active].copy()
+
+    def _maybe_compact(self) -> None:
+        """Piggyback driver: begin past the thresholds, then pay one bounded
+        step per index call (queries included) so ingest traffic amortizes
+        its own compaction."""
+        if not self.config.lsm_auto:
+            return
+        with self._lock:
+            if self._c is None and self._should_begin():
+                self.begin_compaction()
+            active = self._c is not None
+        if active:
+            self.compaction_step()
+
+    def start_compactor(self, interval_s: float = 0.002) -> None:
+        """Drive incremental compaction from a daemon thread instead of
+        (in addition to) piggybacking on index calls."""
+        if self._compactor is not None:
+            return
+        self._compactor_stop.clear()
+
+        def loop():
+            while not self._compactor_stop.is_set():
+                did = 0
+                with self._lock:
+                    if (self._c is None and self.x_np is not None
+                            and self._should_begin()):
+                        self.begin_compaction()
+                    active = self._c is not None
+                if active:
+                    did = self.compaction_step()
+                if not did:
+                    self._compactor_stop.wait(interval_s)
+
+        self._compactor = threading.Thread(target=loop, name="lsm-compactor",
+                                           daemon=True)
+        self._compactor.start()
+
+    def stop_compactor(self) -> None:
+        if self._compactor is None:
+            return
+        self._compactor_stop.set()
+        self._compactor.join()
+        self._compactor = None
+
+    # -- device segment states -----------------------------------------------
+
+    def _base_codes_state(self, mesh, axis):
+        # lock held by caller
+        layout = None if mesh is None else (mesh, axis)
+        key = (self._base_version, layout)
+        if self._base_codes_key != key:
+            bl = self._base_len
+            if mesh is None:
+                bcap = self._bcap
+                stacked = np.zeros(
+                    (self.num_tables, bcap, self._codes_buf.shape[2]),
+                    np.uint32)
+                stacked[:, :bl] = self._codes_buf[:, :bl]
+                self._base_codes_dev = jnp.asarray(stacked)
+            else:
+                stacked = np.ascontiguousarray(self._codes_buf[:, :bl])
+                shards = mesh.shape[axis]
+                pad = (-bl) % shards
+                if pad:
+                    stacked = np.pad(stacked, ((0, 0), (0, pad), (0, 0)))
+                self._base_codes_dev = jax.device_put(
+                    stacked, NamedSharding(mesh, P(None, axis, None)))
+            self._base_codes_key = key
+            self.scan_state_rebuilds += 1
+            self.device_uploads += 1
+        return self._base_codes_dev
+
+    def _base_active_state(self):
+        # lock held by caller; (bcap,) bool, padding rows False
+        key = (self._base_version, self._base_mask_version)
+        if self._base_active_key != key:
+            bl = self._base_len
+            act = np.zeros(self._bcap, bool)
+            act[:bl] = self._active_buf[:bl]
+            self._base_active_dev = jnp.asarray(act)
+            self._base_active_key = key
+            self.device_uploads += 1
+        return self._base_active_dev
+
+    def _base_x_state(self):
+        # lock held by caller; (bcap, d) f32, padding rows zero
+        if self._base_x_key != self._base_version:
+            bl = self._base_len
+            xb = np.zeros((self._bcap, self._x_buf.shape[1]), np.float32)
+            xb[:bl] = self._x_buf[:bl]
+            self._base_x_dev = jnp.asarray(xb)
+            self._base_x_key = self._base_version
+            self.device_uploads += 1
+        return self._base_x_dev
+
+    def _delta_state(self):
+        # lock held by caller; codes/x/active padded to a power-of-two row
+        # bucket so per-insert shape churn retraces jit O(log n) times only
+        if self._delta_key != self._delta_version:
+            lo, hi = self._base_len, self._rows
+            dlen = hi - lo
+            dcap = _pow2_at_least(dlen, self._delta_floor)
+            codes = np.zeros((self.num_tables, dcap,
+                              self._codes_buf.shape[2]), np.uint32)
+            codes[:, :dlen] = self._codes_buf[:, lo:hi]
+            xb = np.zeros((dcap, self._x_buf.shape[1]), np.float32)
+            xb[:dlen] = self._x_buf[lo:hi]
+            act = np.zeros(dcap, bool)
+            act[:dlen] = self._active_buf[lo:hi]
+            self._delta_codes_dev = jnp.asarray(codes)
+            self._delta_x_dev = jnp.asarray(xb)
+            self._delta_active_dev = jnp.asarray(act)
+            self._delta_key = self._delta_version
+            self.delta_uploads += 1
+            self.device_uploads += 1
+        return (self._delta_codes_dev, self._delta_x_dev,
+                self._delta_active_dev)
+
+    # -- lookup / query ------------------------------------------------------
+
+    def lookup_batch(self, w, qcodes: np.ndarray | None = None):
+        """Probe path: the host tables are id-keyed (they survive
+        compaction), so the parent lookup returns candidates in stable-id
+        space — translate back to the ROW space the lookup contract
+        promises.  Order-preserving: ids ascend with rows, so probe order
+        and union first-occurrence order both map through unchanged."""
+        with self._lock:
+            cands, hits, secs = super().lookup_batch(w, qcodes)
+            t0 = time.perf_counter()
+            cands = [self.ids_to_rows(c) if c.size else c.astype(np.int64)
+                     for c in cands]
+            return cands, hits, secs + time.perf_counter() - t0
+
+    def rerank_rows(self, w, cands: list[np.ndarray], l: int = 1,
+                    mask_rows=None):
+        """Segmented exact-margin re-rank: base rows gather from the
+        device-resident immutable base features, delta rows from the small
+        delta upload — the full (rows, d) array never re-uploads on insert.
+        Bit-identical to the parent's monolithic gather."""
+        ids, valid = bq.pad_candidates(cands)
+        if mask_rows is not None:
+            valid = valid & np.asarray(mask_rows, bool)[ids]
+        nonempty = valid.any(axis=1)
+        w = np.atleast_2d(np.asarray(w, np.float32))
+        with self._lock:
+            split = self._base_len
+            delta_len = self._rows - split
+            base_x = self._base_x_state()
+            delta_x = self._delta_state()[1] if delta_len else None
+        margins, top = self._rerank_dev(
+            jnp.asarray(w), jnp.asarray(ids), jnp.asarray(valid), l,
+            base_x, delta_x, split, delta_len)
+        margins = np.asarray(margins)
+        top = np.asarray(top).astype(np.int64)
+        top[~np.isfinite(margins)] = -1
+        return top, margins, nonempty
+
+    def _rerank_dev(self, w_dev, rows_dev, valid_dev, l, base_x, delta_x,
+                    split, delta_len):
+        if delta_len == 0:
+            return margin_rerank_batch(base_x, w_dev, rows_dev, valid_dev, l)
+        if split == 0:
+            return margin_rerank_batch(delta_x, w_dev, rows_dev, valid_dev, l)
+        return margin_rerank_segmented(base_x, delta_x, jnp.int32(split),
+                                       w_dev, rows_dev, valid_dev, l)
+
+    def query_batch(self, w, mask=None, l: int = 1) -> BatchQueryResult:
+        with self._lock:
+            res = super().query_batch(w, mask, l)
+        self._maybe_compact()
+        return res
+
+    def _scan_segment(self, codes_dev, qcodes, l: int, seg_len: int,
+                      cap: int, dead: int, active_dev, fused: bool,
+                      select, mesh, shard_axis):
+        """Scan one segment and return its top-l LIVE candidates,
+        (G, B, l), lex-sorted, local row ids.  Single-device: exactly l
+        deep with the liveness mask applied inside selection; sharded:
+        l(+slack) deep with post-filtering."""
+        if mesh is not None:
+            # shard padding is masked inside the sharded scan (n_valid);
+            # tombstones still need the overscan-and-filter slack rule here
+            depth = (l if not dead
+                     else min(_pow2_at_least(l + dead), cap))
+            d, i = hamming_topk_grouped_sharded(
+                codes_dev, qcodes, depth, mesh,
+                axis=shard_axis, use_kernel=fused, n_valid=seg_len,
+                select=select)
+            if dead:
+                return drop_tombstones_topk(d, i, active_dev, l)
+            return _to_l(d, i, l)
+        # single-device path: tombstones AND pad rows are masked to the
+        # sentinel at distance level inside selection (active_dev is False
+        # for both), so the scan is exactly l deep and already filtered —
+        # one trace per (B, cap) pad bucket, immune to insert/delete/
+        # compaction churn (the mask is a traced operand, not a jit key)
+        if fused:
+            from repro.kernels import ops
+            d, i = ops.hamming_topk_grouped(codes_dev, qcodes, l,
+                                            select=select,
+                                            active=active_dev)
+        else:
+            d, i = hamming_topk_grouped(codes_dev, qcodes, l,
+                                        select=select, active=active_dev)
+        return d, i
+
+    def query_scan_batch(self, w, l: int = 16, topk: int = 1, mask=None,
+                         mesh=None, shard_axis: str = "data"
+                         ) -> BatchQueryResult:
+        """Two-segment fused scan (see parent for the l/topk contract).
+
+        The base segment scans exactly like the monolithic index (fused
+        kernel / jnp / sharded per config and mesh); the delta scans as
+        plain jnp until it exceeds ``config.lsm_delta_fused_rows``; the two
+        candidate lists merge through core.search.merge_topk_segments.
+        All geometry and device handles are snapshotted under the lock, so
+        a compaction swap concurrent with this call can only make the
+        answer reflect the index state wholly before or wholly after the
+        swap — never a mix.
+        """
+        self._require_fit("query_scan_batch")
+        w = np.atleast_2d(np.asarray(w, np.float32))
+        b = w.shape[0]
+        t0 = time.perf_counter()
+        hits = np.zeros(self.num_tables, dtype=np.int64)
+        cfg = self.config
+        with self._lock:
+            split = self._base_len
+            rows = self._rows
+            ids_view = self.ids_np          # old buffers stay valid views
+            active_view = self._active_buf[:rows]
+            n_live = int(active_view.sum())
+            if n_live == 0:
+                ids_pad = np.full((b, topk), -1, np.int64)
+                m_pad = np.full((b, topk), np.inf, np.float32)
+                return BatchQueryResult(
+                    np.full(b, -1, np.int64), np.full(b, np.inf, np.float32),
+                    np.zeros(b, dtype=bool),
+                    [np.empty(0, np.int64) for _ in range(b)],
+                    time.perf_counter() - t0, 0.0, hits,
+                    ids_topk=ids_pad if topk > 1 else None,
+                    margins_topk=m_pad if topk > 1 else None)
+            base_dead = split - int(active_view[:split].sum())
+            delta_len = rows - split
+            delta_dead = (delta_len
+                          - int(active_view[split:rows].sum()))
+            base_codes = (self._base_codes_state(mesh, shard_axis)
+                          if split else None)
+            base_active = (self._base_active_state()
+                           if split else None)
+            base_x = self._base_x_state()
+            delta = self._delta_state() if delta_len else None
+            bcap = (self._bcap if mesh is None
+                    else _pow2_at_least(split, _MIN_CAP))
+            dcap = _pow2_at_least(delta_len, self._delta_floor)
+        qcodes = bq.hash_queries_all(self.families, w)        # (L, B, W)
+        select = cfg.fused_select
+        d_m = i_m = None
+        if base_codes is not None:
+            d_b, i_b = self._scan_segment(
+                base_codes, qcodes, l, split, bcap, base_dead, base_active,
+                cfg.use_kernels, select, mesh, shard_axis)
+            d_m, i_m = d_b, i_b
+        if delta is not None:
+            delta_codes, delta_x, delta_active = delta
+            fused = cfg.use_kernels and delta_len >= cfg.lsm_delta_fused_rows
+            d_d, i_d = self._scan_segment(
+                delta_codes, qcodes, l, delta_len, dcap, delta_dead,
+                delta_active, fused, select, None, shard_axis)
+            # delta-local ids -> global rows (sentinels stay -1)
+            i_d = jnp.where(i_d < 0, jnp.int32(-1),
+                            i_d + jnp.int32(split))
+            if d_m is None:
+                d_m, i_m = d_d, i_d
+            else:
+                d_m, i_m = merge_topk_segments(d_m, i_m, d_d, i_d, l)
+        else:
+            delta_x = None
+        # device-side union/dedup over global rows — row order == stable-id
+        # order, so this is the same dedup the monolithic scan performs
+        flat = jnp.transpose(i_m, (1, 0, 2)).reshape(b, -1)   # (B, L*l)
+        flat = jnp.sort(flat, axis=1)
+        uniq = flat >= 0
+        uniq &= jnp.concatenate(
+            [jnp.ones((b, 1), bool), flat[:, 1:] != flat[:, :-1]], axis=1)
+        grows = jnp.clip(flat, 0, rows - 1)
+        mask_rows = None if mask is None else (
+            np.asarray(mask, dtype=bool)[ids_view])
+        valid = uniq if mask_rows is None else (
+            uniq & jnp.asarray(mask_rows)[grows])
+        lookup_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        margins, top = self._rerank_dev(
+            jnp.asarray(w, jnp.float32), grows, valid, topk,
+            base_x, delta_x, split, delta_len)
+        margins = np.asarray(margins)
+        top = np.asarray(top).astype(np.int64)
+        top[~np.isfinite(margins)] = -1
+        if margins.shape[1] < topk:   # topk > L*l candidates: pad, not clip
+            padw = ((0, 0), (0, topk - margins.shape[1]))
+            margins = np.pad(margins, padw, constant_values=np.inf)
+            top = np.pad(top, padw, constant_values=-1)
+        live = top >= 0
+        top_ids = np.full(top.shape, -1, np.int64)
+        top_ids[live] = ids_view[top[live]]
+        hits = np.asarray((i_m >= 0).sum(axis=(1, 2)), dtype=np.int64)
+        grows_np, valid_np = np.asarray(grows), np.asarray(valid)
+        uniq_np = np.asarray(uniq)
+        cands = [ids_view[grows_np[i, uniq_np[i]]] for i in range(b)]
+        rerank_s = time.perf_counter() - t0
+        self._maybe_compact()
+        return BatchQueryResult(
+            top_ids[:, 0], margins[:, 0], valid_np.any(axis=1), cands,
+            lookup_s, rerank_s, hits,
+            ids_topk=top_ids if topk > 1 else None,
+            margins_topk=margins if topk > 1 else None)
+
+    # -- counters ------------------------------------------------------------
+
+    def stats(self) -> dict:
+        st = super().stats()
+        with self._lock:
+            st.update({
+                "backend": "lsm",
+                "base_rows": self._base_len,
+                "delta_rows": self._rows - self._base_len,
+                "frozen_rows": self._frozen_len,
+                "compaction_active": self._c is not None,
+                "delta_uploads": self.delta_uploads,
+            })
+        return st

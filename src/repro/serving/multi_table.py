@@ -73,6 +73,14 @@ class MultiTableIndex:
         self.compactions = 0
         self.version = 0                    # bumped on insert/delete/compact
         self.fit_s = 0.0
+        # observability: how often index state crosses the PCIe/ICI boundary
+        # and how much compaction work ran.  The monolithic index re-uploads
+        # its whole scan state after every mutation; the LSM subclass
+        # (serving.lsm) exists to keep these flat under insert traffic —
+        # the win is measured by these counters, not just asserted.
+        self.device_uploads = 0        # host->device transfers of index state
+        self.scan_state_rebuilds = 0   # stacked-code scan layouts rebuilt
+        self.compaction_steps = 0      # bounded compaction work units
         self._x_dev = None
         self._codes_dev = None        # (L, n_live[_pad], W) stacked live codes
         self._live_rows: np.ndarray | None = None
@@ -153,6 +161,7 @@ class MultiTableIndex:
     def x(self):
         if self._x_dev is None:
             self._x_dev = jnp.asarray(self.x_np)
+            self.device_uploads += 1
         return self._x_dev
 
     # -- stable-id translation -----------------------------------------------
@@ -167,13 +176,22 @@ class MultiTableIndex:
         return out
 
     def ids_to_rows(self, ids: np.ndarray) -> np.ndarray:
-        """Stable ids -> current rows.  Unknown / compacted-away /
-        tombstoned ids raise KeyError (mirrors the pre-compaction
-        behaviour of deleting an unknown row)."""
+        """Stable ids -> current rows.
+
+        Never-assigned ids (negative, or >= the id high-water mark) and
+        compacted-away ids raise KeyError — the range check runs before the
+        ``_row_of`` gather so an out-of-range id can never surface as a raw
+        numpy IndexError (or worse, a negative id silently wrapping to a
+        valid row).  Tombstoned-but-not-yet-compacted ids still RESOLVE to
+        their row: ``delete`` relies on that to find the row it is about to
+        tombstone, and callers that need liveness check ``active[row]``.
+        """
+        self._require_fit("ids_to_rows")
         ids = np.asarray(ids, dtype=np.int64)
-        if ids.size and (ids.min() < 0 or ids.max() >= self._next_id):
+        n_ids = self._row_of.shape[0]
+        if ids.size and (ids.min() < 0 or ids.max() >= n_ids):
             raise KeyError(f"unknown ids (never assigned): "
-                           f"{ids[(ids < 0) | (ids >= self._next_id)][:8]}")
+                           f"{ids[(ids < 0) | (ids >= n_ids)][:8]}")
         rows = self._row_of[ids]
         if (rows < 0).any():
             raise KeyError(f"ids compacted away: {ids[rows < 0][:8]}")
@@ -260,6 +278,7 @@ class MultiTableIndex:
         self._invalidate()
         self.version += 1
         self.compactions += 1
+        self.compaction_steps += 1   # stop-the-world rebuild = one big step
         return self.ids_np.copy()
 
     # -- lookup / query ------------------------------------------------------
@@ -293,6 +312,15 @@ class MultiTableIndex:
             cands = [c[:cfg.max_candidates] for c in cands]
         return cands, hits, time.perf_counter() - t0
 
+    def rerank_rows(self, w, cands: list[np.ndarray], l: int = 1,
+                    mask_rows=None):
+        """Exact-margin re-rank of B ragged ROW-space candidate lists
+        (contract of ``batch_query.batched_rerank``).  This is the hook the
+        LSM subclass overrides with a two-segment gather so the immutable
+        base features never re-upload; every probe-path re-rank (here and
+        in HashQueryService) routes through it."""
+        return bq.batched_rerank(self.x, w, cands, l, mask_rows)
+
     def query_batch(self, w, mask=None, l: int = 1) -> BatchQueryResult:
         """Answer B hyperplane queries as one batch.
 
@@ -302,8 +330,8 @@ class MultiTableIndex:
         cands, hits, lookup_s = self.lookup_batch(w)
         w = np.atleast_2d(np.asarray(w, np.float32))
         t0 = time.perf_counter()
-        ids, margins, nonempty = bq.batched_rerank(self.x, w, cands, l,
-                                                   self.mask_to_rows(mask))
+        ids, margins, nonempty = self.rerank_rows(w, cands, l,
+                                                  self.mask_to_rows(mask))
         ids = self.rows_to_ids(ids)
         cands = [self.rows_to_ids(c) for c in cands]
         rerank_s = time.perf_counter() - t0
@@ -333,6 +361,8 @@ class MultiTableIndex:
         """
         key = None if mesh is None else (mesh, axis)
         if self._codes_dev is None or self._scan_key != key:
+            self.scan_state_rebuilds += 1
+            self.device_uploads += 1
             self._live_rows = np.flatnonzero(self.active)
             stacked = np.stack([c[self._live_rows] for c in self.codes])
             if mesh is None:
@@ -462,6 +492,9 @@ class MultiTableIndex:
             "compactions": self.compactions,
             "bits": self.config.bits,
             "version": self.version,
+            "device_uploads": self.device_uploads,
+            "scan_state_rebuilds": self.scan_state_rebuilds,
+            "compaction_steps": self.compaction_steps,
             "per_table": per_table,
             "buckets_total": int(sum(s["buckets"] for s in per_table)),
         }

@@ -33,6 +33,7 @@ time grows linearly with scan_l — keep it shallow there.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from collections import OrderedDict
 
@@ -74,6 +75,35 @@ class HashQueryService:
         self.lookup_s = 0.0
         self.rerank_s = 0.0
         self.latencies_s: list[float] = []
+        self.inserts = 0
+        self.inserted_rows = 0
+        self.deletes = 0
+        self.deleted_rows = 0
+
+    def _index_lock(self):
+        """The index's mutation lock when it has one (the LSM index runs a
+        compactor that swaps row storage under live traffic — probe answers
+        must see one consistent row space across lookup + re-rank + id
+        translation); a no-op for the plain MultiTableIndex."""
+        return getattr(self.index, "_lock", None) or contextlib.nullcontext()
+
+    # -- writes --------------------------------------------------------------
+
+    def insert(self, x_new) -> np.ndarray:
+        """Forward a streaming insert to the index; returns the assigned
+        stable ids.  The candidate cache self-invalidates on the version
+        bump (``_cache_get``), so no explicit flush is needed here."""
+        ids = self.index.insert(x_new)
+        self.inserts += 1
+        self.inserted_rows += int(ids.size)
+        return ids
+
+    def delete(self, ids) -> None:
+        """Forward a streaming delete (tombstone) to the index."""
+        ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+        self.index.delete(ids)
+        self.deletes += 1
+        self.deleted_rows += int(ids.size)
 
     # -- micro-batching ------------------------------------------------------
 
@@ -133,30 +163,34 @@ class HashQueryService:
         qcodes = np.asarray(bq.hash_queries_all(self.index.families, ws))
         keys = [qcodes[:, i, :].tobytes() for i in range(b)]
 
-        cands: list[np.ndarray | None] = [None] * b
-        miss_rows = []
-        for i, key in enumerate(keys):
-            hit = self._cache_get(key) if use_cache else None
-            if hit is None:
-                miss_rows.append(i)
-            else:
-                cands[i] = hit
-                self.cache_hits += 1
-        lookup_s = 0.0
-        if miss_rows:
-            found, _, lookup_s = self.index.lookup_batch(
-                ws[miss_rows], qcodes=qcodes[:, miss_rows, :])
-            for i, cand in zip(miss_rows, found):
-                cands[i] = cand
-                if use_cache:
-                    self._cache_put(keys[i], cand)
+        # one consistent row space for cache probe + lookup + re-rank + id
+        # translation: cached candidate lists are row-space, so a compaction
+        # swap mid-answer would misattribute them (see _index_lock)
+        with self._index_lock():
+            cands: list[np.ndarray | None] = [None] * b
+            miss_rows = []
+            for i, key in enumerate(keys):
+                hit = self._cache_get(key) if use_cache else None
+                if hit is None:
+                    miss_rows.append(i)
+                else:
+                    cands[i] = hit
+                    self.cache_hits += 1
+            lookup_s = 0.0
+            if miss_rows:
+                found, _, lookup_s = self.index.lookup_batch(
+                    ws[miss_rows], qcodes=qcodes[:, miss_rows, :])
+                for i, cand in zip(miss_rows, found):
+                    cands[i] = cand
+                    if use_cache:
+                        self._cache_put(keys[i], cand)
 
-        t0 = time.perf_counter()
-        ids, margins, nonempty = bq.batched_rerank(
-            self.index.x, ws, cands, 1, self.index.mask_to_rows(mask))
-        ids = self.index.rows_to_ids(ids)
-        cands = [self.index.rows_to_ids(c) for c in cands]
-        rerank_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            ids, margins, nonempty = self.index.rerank_rows(
+                ws, cands, 1, self.index.mask_to_rows(mask))
+            ids = self.index.rows_to_ids(ids)
+            cands = [self.index.rows_to_ids(c) for c in cands]
+            rerank_s = time.perf_counter() - t0
 
         elapsed = time.perf_counter() - t_start
         self.requests += b
@@ -207,4 +241,15 @@ class HashQueryService:
             "lookup_s": self.lookup_s,
             "rerank_s": self.rerank_s,
             "index_version": self.index.version,
+            "inserts": self.inserts,
+            "inserted_rows": self.inserted_rows,
+            "deletes": self.deletes,
+            "deleted_rows": self.deleted_rows,
+            # index-side observability: transfer and compaction work done
+            # under this service's traffic (serving.lsm exists to keep the
+            # first two flat under insert streams — see multi_table counters)
+            "index_device_uploads": self.index.device_uploads,
+            "index_scan_state_rebuilds": self.index.scan_state_rebuilds,
+            "index_compaction_steps": self.index.compaction_steps,
+            "index_compactions": self.index.compactions,
         }

@@ -222,6 +222,66 @@ def test_selection_parity_few_distinct_values(rng):
                                                  block_n=512))
 
 
+def test_selection_parity_active_mask(rng):
+    """The traced ``active`` mask (LSM tombstone/pad masking): every
+    selection path must return the top-l of the LIVE rows alone —
+    bit-identical to densely scanning just the survivors — with
+    (DIST_SENTINEL, -1) sentinels once live rows run out."""
+    from repro.core import search
+    from repro.kernels.hamming import DIST_SENTINEL
+    g, n, b, w, l = 2, 500, 4, 2, 16
+    codes = rng.integers(0, 2**32, (g, n, w), dtype=np.uint32)
+    qs = rng.integers(0, 2**32, (g, b, w), dtype=np.uint32)
+    cj, qj = jnp.asarray(codes), jnp.asarray(qs)
+
+    def paths(mask):
+        aj = jnp.asarray(mask)
+        return {
+            "kernel_argmin": ops.hamming_topk_grouped(
+                cj, qj, l, block_n=256, select="argmin", active=aj),
+            "kernel_hist": ops.hamming_topk_grouped(
+                cj, qj, l, block_n=256, select="hist", active=aj),
+            "kernel_hist_dma": ops.hamming_topk_grouped(
+                cj, qj, l, block_n=256, select="hist", dma=True, active=aj),
+            "jnp_lax": search.hamming_topk_grouped(cj, qj, l,
+                                                   select="argmin",
+                                                   active=aj),
+            "jnp_hist": search.hamming_topk_grouped_hist(cj, qj, l, aj),
+        }
+
+    def dense_oracle(mask):
+        live = np.flatnonzero(mask)
+        dd, di = ops.hamming_topk_grouped(jnp.asarray(codes[:, live]),
+                                          qj, l)
+        dd, di = np.asarray(dd), np.asarray(di)
+        return dd, np.where(di < 0, -1,
+                            live[np.clip(di, 0, live.size - 1)])
+
+    # ~60% live, plenty more than l of them
+    mask = rng.random(n) < 0.6
+    d, i = _assert_paths_identical(paths(mask))
+    od, oi = dense_oracle(mask)
+    assert np.array_equal(d, od) and np.array_equal(i, oi)
+
+    # fewer live rows than l: the tail must be sentinels
+    sparse = np.zeros(n, bool)
+    sparse[[7, 123, 400]] = True
+    d, i = _assert_paths_identical(paths(sparse))
+    od, oi = dense_oracle(sparse)
+    assert np.array_equal(d, od) and np.array_equal(i, oi)
+    assert (d[..., 3:] == DIST_SENTINEL).all() and (i[..., 3:] == -1).all()
+
+    # nothing live at all
+    d, i = _assert_paths_identical(paths(np.zeros(n, bool)))
+    assert (d == DIST_SENTINEL).all() and (i == -1).all()
+
+    # all live == no mask at all
+    d, i = _assert_paths_identical(paths(np.ones(n, bool)))
+    dn, in_ = ops.hamming_topk_grouped(cj, qj, l, block_n=256)
+    assert np.array_equal(d, np.asarray(dn))
+    assert np.array_equal(i, np.asarray(in_))
+
+
 def test_select_env_and_validation(monkeypatch):
     from repro.core.search import env_fused_select
     monkeypatch.delenv("REPRO_FUSED_SELECT", raising=False)

@@ -1,0 +1,316 @@
+"""LSM delta index: streaming ingest parity, tombstone filtering,
+incremental compaction under live queries, and the service write paths.
+
+The load-bearing contract everywhere below: answers from the
+base+delta+tombstone LSM layout are BIT-IDENTICAL — ids, margins, tie
+order, sentinels — to a plain MultiTableIndex replaying the same mutation
+stream, on both the probe and the fused-scan backends, regardless of how
+many incremental compactions have folded the delta back in between.
+These tests run unchanged under all three CI legs (kernel-hist /
+kernel-argmin / no-kernel): the scan path honours REPRO_USE_KERNELS /
+REPRO_FUSED_SELECT through IndexConfig defaults.
+"""
+import numpy as np
+import pytest
+
+from repro.core.indexer import IndexConfig
+from repro.data.synthetic import tiny1m_like
+from repro.serving import (AsyncHashQueryService, HashQueryService,
+                           LSMMultiTableIndex, MultiTableIndex)
+
+D = 24
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return tiny1m_like(n_labeled=400, n_unlabeled=0, d=D, classes=5, seed=0)
+
+
+@pytest.fixture(scope="module")
+def queries(corpus):
+    rng = np.random.default_rng(1)
+    return rng.normal(size=(16, corpus.x.shape[1])).astype(np.float32)
+
+
+def _cfg(**kw):
+    kw.setdefault("method", "bh")
+    kw.setdefault("bits", 14)
+    kw.setdefault("tables", 2)
+    kw.setdefault("seed", 3)
+    # small thresholds so short test streams cross real compaction cycles
+    kw.setdefault("lsm_delta_min", 64)
+    kw.setdefault("lsm_delta_threshold", 0.25)
+    kw.setdefault("lsm_step_rows", 128)
+    return IndexConfig(**kw)
+
+
+def _pair(x, **kw):
+    """(LSM index, monolithic reference) built from the same seed/data —
+    table families are identical, so candidate sets match exactly."""
+    return (LSMMultiTableIndex(_cfg(**kw)).fit(x),
+            MultiTableIndex(_cfg(**kw)).fit(x))
+
+
+def _assert_scan_equal(a, b):
+    assert np.array_equal(a.ids, b.ids)
+    assert np.array_equal(a.margins, b.margins)
+    assert np.array_equal(a.nonempty, b.nonempty)
+    for ca, cb in zip(a.candidates, b.candidates):
+        # scan candidates are reported sorted by id on both backends
+        assert np.array_equal(ca, cb)
+    if a.ids_topk is not None or b.ids_topk is not None:
+        assert np.array_equal(a.ids_topk, b.ids_topk)
+        assert np.array_equal(a.margins_topk, b.margins_topk)
+
+
+def _assert_probe_equal(a, b):
+    assert np.array_equal(a.ids, b.ids)
+    assert np.array_equal(a.margins, b.margins)
+    for ca, cb in zip(a.candidates, b.candidates):
+        assert np.array_equal(ca, cb)
+
+
+def test_insert_delete_stream_parity(corpus, queries):
+    """Interleaved inserts/deletes crossing >= 2 auto-compactions stay
+    bit-identical to the monolithic index on both backends, with a query
+    between every mutation burst (i.e. against live traffic)."""
+    rng = np.random.default_rng(7)
+    lsm, mono = _pair(corpus.x)
+    for step in range(8):
+        xa = rng.normal(size=(40, corpus.x.shape[1])).astype(np.float32)
+        ia, ib = lsm.insert(xa), mono.insert(xa)
+        assert np.array_equal(ia, ib)
+        if step % 2 == 1:
+            dead = ia[: 1 + step]
+            lsm.delete(dead)
+            mono.delete(dead)
+        _assert_scan_equal(lsm.query_scan_batch(queries, l=9, topk=3),
+                           mono.query_scan_batch(queries, l=9, topk=3))
+        _assert_probe_equal(lsm.query_batch(queries, l=2),
+                            mono.query_batch(queries, l=2))
+    assert lsm.compactions >= 2, "stream too small to exercise compaction"
+
+
+def test_scan_state_stays_resident_under_inserts(corpus, queries):
+    """The observability story: under an insert stream the monolithic index
+    rebuilds its full scan state per mutation, while the LSM base stays
+    device-resident — only the small delta re-uploads."""
+    rng = np.random.default_rng(8)
+    # large delta threshold: no compaction mid-test, pure delta absorption
+    lsm, mono = _pair(corpus.x, lsm_delta_min=10_000)
+    lsm.query_scan_batch(queries, l=8)
+    mono.query_scan_batch(queries, l=8)
+    base_rebuilds = lsm.scan_state_rebuilds
+    for _ in range(4):
+        xa = rng.normal(size=(16, corpus.x.shape[1])).astype(np.float32)
+        lsm.insert(xa)
+        mono.insert(xa)
+        _assert_scan_equal(lsm.query_scan_batch(queries, l=8),
+                           mono.query_scan_batch(queries, l=8))
+    st = lsm.stats()
+    assert st["backend"] == "lsm" and st["delta_rows"] == 64
+    assert lsm.scan_state_rebuilds == base_rebuilds, \
+        "base scan state must not rebuild on inserts"
+    assert mono.scan_state_rebuilds >= 4, \
+        "monolithic reference should rebuild per insert"
+    assert lsm.delta_uploads >= 4
+    assert lsm.device_uploads < mono.device_uploads
+
+
+def test_tombstones_filtered_from_scan(corpus, queries):
+    """Deleting the scan-topping rows must surface the runners-up (the
+    slack contract), identically to the monolithic index."""
+    lsm, mono = _pair(corpus.x)
+    first = lsm.query_scan_batch(queries, l=6)
+    victims = np.unique(first.ids[first.ids >= 0])[:8]
+    lsm.delete(victims)
+    mono.delete(victims)
+    after_l = lsm.query_scan_batch(queries, l=6)
+    after_m = mono.query_scan_batch(queries, l=6)
+    _assert_scan_equal(after_l, after_m)
+    assert not np.isin(victims, after_l.ids).any()
+    for c in after_l.candidates:
+        assert not np.isin(victims, c).any()
+
+
+def test_incremental_compaction_bounded_steps(corpus, queries):
+    """Manual begin/step driving: every copy step touches at most
+    ``max_rows`` source rows, a query issued MID-compaction answers
+    bit-identically, and after the swap the host tables objects survive
+    untouched (they are id-keyed)."""
+    lsm, mono = _pair(corpus.x, lsm_auto=False)
+    rng = np.random.default_rng(9)
+    xa = rng.normal(size=(220, corpus.x.shape[1])).astype(np.float32)
+    lsm.insert(xa)
+    mono.insert(xa)
+    dead = np.arange(10, 60, dtype=np.int64)
+    lsm.delete(dead)
+    mono.delete(dead)
+    tables_before = list(lsm.tables)
+    ref = mono.query_scan_batch(queries, l=9, topk=2)
+    pref = mono.query_batch(queries)
+
+    assert lsm.begin_compaction()
+    steps = 0
+    mid_checked = False
+    while lsm._c is not None:
+        n = lsm.compaction_step(max_rows=100)
+        assert n <= 100
+        steps += 1
+        if not mid_checked:   # query with the compaction half-done
+            _assert_scan_equal(lsm.query_scan_batch(queries, l=9, topk=2),
+                               ref)
+            _assert_probe_equal(lsm.query_batch(queries), pref)
+            mid_checked = True
+        assert steps < 100, "compaction failed to converge"
+    assert steps > 2, "steps not bounded — compaction ran monolithically"
+    assert lsm.compactions == 1 and lsm._frozen_len == 0
+    # post-swap: same answers, dead rows physically gone from the base
+    _assert_scan_equal(lsm.query_scan_batch(queries, l=9, topk=2), ref)
+    _assert_probe_equal(lsm.query_batch(queries), pref)
+    assert lsm.stats()["base_rows"] == lsm.active.sum() == 400 + 220 - 50
+    assert all(a is b for a, b in zip(tables_before, lsm.tables)), \
+        "id-keyed probe tables must survive compaction"
+    with pytest.raises(KeyError, match="compacted away"):
+        lsm.ids_to_rows(dead[:1])
+
+
+def test_mixed_soak_bit_identical_to_fresh_build(corpus, queries):
+    """Acceptance: a seeded mixed insert/delete/query soak crossing >= 2
+    incremental compaction cycles ends bit-identical to a FRESH monolithic
+    index built over the surviving rows, on both backends.  (Stable ids
+    differ from a fresh build's row ids, so the comparison replays the
+    stream into a monolithic index for id parity and checks margins against
+    the fresh build.)"""
+    rng = np.random.default_rng(11)
+    lsm, mono = _pair(corpus.x, lsm_step_rows=96)
+    live_x = [corpus.x[i] for i in range(corpus.x.shape[0])]
+    live_ids = list(range(corpus.x.shape[0]))
+    for step in range(10):
+        xa = rng.normal(size=(48, corpus.x.shape[1])).astype(np.float32)
+        ids = lsm.insert(xa)
+        mono.insert(xa)
+        live_x.extend(xa)
+        live_ids.extend(ids)
+        if step % 3 == 2:
+            kill = rng.choice(len(live_ids), size=12, replace=False)
+            dead = np.sort(np.asarray([live_ids[i] for i in kill],
+                                      dtype=np.int64))
+            lsm.delete(dead)
+            mono.delete(dead)
+            keep = [i for i in range(len(live_ids)) if i not in set(kill)]
+            live_x = [live_x[i] for i in keep]
+            live_ids = [live_ids[i] for i in keep]
+        lsm.query_scan_batch(queries[:4], l=8)   # live traffic
+    assert lsm.compactions >= 2
+    _assert_scan_equal(lsm.query_scan_batch(queries, l=9, topk=3),
+                       mono.query_scan_batch(queries, l=9, topk=3))
+    _assert_probe_equal(lsm.query_batch(queries, l=2),
+                        mono.query_batch(queries, l=2))
+    # margins parity vs a genuinely fresh monolithic build of the survivors
+    fresh = MultiTableIndex(_cfg()).fit(np.stack(live_x))
+    rl = lsm.query_scan_batch(queries, l=9)
+    rf = fresh.query_scan_batch(queries, l=9)
+    assert np.array_equal(rl.margins, rf.margins)
+    assert np.array_equal(np.asarray(live_ids)[rf.ids], rl.ids)
+
+
+def test_l_exceeds_rows_and_mask_edges(corpus, queries):
+    """l > n sentinels, topk > candidate count, and stable-id masks all
+    behave identically across the segment split."""
+    lsm, mono = _pair(corpus.x, lsm_delta_min=10_000)
+    rng = np.random.default_rng(13)
+    xa = rng.normal(size=(30, corpus.x.shape[1])).astype(np.float32)
+    lsm.insert(xa)
+    mono.insert(xa)
+    _assert_scan_equal(lsm.query_scan_batch(queries, l=4096, topk=2),
+                       mono.query_scan_batch(queries, l=4096, topk=2))
+    mask = np.zeros(lsm._next_id, dtype=bool)
+    mask[::5] = True
+    _assert_scan_equal(lsm.query_scan_batch(queries, l=9, mask=mask),
+                       mono.query_scan_batch(queries, l=9, mask=mask))
+    _assert_probe_equal(lsm.query_batch(queries, mask=mask),
+                        mono.query_batch(queries, mask=mask))
+
+
+def test_service_write_forwarding(corpus, queries):
+    """HashQueryService.insert/delete forward to the index, the candidate
+    cache self-invalidates, and stats surface the write + index counters."""
+    lsm, mono = _pair(corpus.x)
+    svc = HashQueryService(lsm, mode="probe")
+    ref = HashQueryService(mono, mode="probe")
+    svc.query_batch(queries)
+    ref.query_batch(queries)
+    rng = np.random.default_rng(17)
+    xa = rng.normal(size=(70, corpus.x.shape[1])).astype(np.float32)
+    ids = svc.insert(xa)
+    assert np.array_equal(ids, mono.insert(xa))
+    svc.delete(ids[:5])
+    mono.delete(ids[:5])
+    a = svc.query_batch(queries)
+    b = ref.query_batch(queries)
+    assert [r.index for r in a] == [r.index for r in b]
+    assert [r.margin for r in a] == [r.margin for r in b]
+    st = svc.stats()
+    assert st["inserts"] == 1 and st["inserted_rows"] == 70
+    assert st["deletes"] == 1 and st["deleted_rows"] == 5
+    for key in ("index_device_uploads", "index_scan_state_rebuilds",
+                "index_compaction_steps", "index_compactions"):
+        assert key in st
+
+
+def test_async_write_interleaving(corpus):
+    """submit_insert/submit_delete interleave with queries in FIFO order:
+    a query submitted before a delete still answers from the pre-delete
+    index; one submitted after sees the tombstone."""
+    lsm = LSMMultiTableIndex(_cfg()).fit(corpus.x)
+    clock = [0.0]
+    svc = AsyncHashQueryService(lsm, deadline_ms=5.0, max_batch=16,
+                                mode="scan", scan_l=8,
+                                clock=lambda: clock[0], start=False)
+    rng = np.random.default_rng(19)
+    w = rng.normal(size=(corpus.x.shape[1],)).astype(np.float32)
+    best = lsm.query_scan_batch(w[None], l=8).ids[0]
+    assert best >= 0
+    f_pre = svc.submit(w)
+    f_del = svc.submit_delete(np.asarray([best]))
+    f_post = svc.submit(w)
+    clock[0] = 1.0
+    assert svc.pump(clock[0]) == 3
+    assert f_pre.result(1).index == best
+    assert f_del.result(1) is None
+    assert f_post.result(1).index != best
+    # inserts resolve to the assigned stable ids and are queryable next run
+    f_ins = svc.submit_insert(rng.normal(size=(4, corpus.x.shape[1])).astype(np.float32))
+    clock[0] = 2.0
+    svc.pump(clock[0])
+    new_ids = f_ins.result(1)
+    assert new_ids.size == 4 and (new_ids >= 0).all()
+    assert svc.stats()["completed"] == 4
+    svc.close()
+
+
+def test_background_compactor_under_live_queries(corpus, queries):
+    """A daemon compactor folding the delta while queries flow: answers
+    stay bit-identical to a monolithic replay throughout, and at least one
+    full compaction cycle completes."""
+    lsm, mono = _pair(corpus.x, lsm_auto=False, lsm_step_rows=64)
+    rng = np.random.default_rng(23)
+    lsm.start_compactor(interval_s=1e-4)
+    try:
+        deadline = 200
+        for step in range(deadline):
+            xa = rng.normal(size=(32, corpus.x.shape[1])).astype(np.float32)
+            ia = lsm.insert(xa)
+            mono.insert(xa)
+            if step % 2:
+                lsm.delete(ia[:3])
+                mono.delete(ia[:3])
+            _assert_scan_equal(lsm.query_scan_batch(queries[:8], l=8),
+                               mono.query_scan_batch(queries[:8], l=8))
+            if lsm.compactions >= 1 and not lsm.stats()["compaction_active"]:
+                break
+        assert lsm.compactions >= 1, "compactor never completed a cycle"
+    finally:
+        lsm.stop_compactor()
+    _assert_probe_equal(lsm.query_batch(queries), mono.query_batch(queries))

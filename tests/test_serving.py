@@ -98,6 +98,27 @@ def test_delete_never_answered(corpus, queries):
         mt.delete(victims[:1])     # double delete
 
 
+def test_ids_to_rows_never_issued(corpus):
+    """Ids outside [0, next_id) raise the documented KeyError — never a raw
+    numpy IndexError (and a negative id must not wrap to a valid row)."""
+    mt = MultiTableIndex(_cfg()).fit(corpus.x)
+    n = corpus.x.shape[0]
+    for bad in (-1, n, n + 12345, np.int64(2) ** 40):
+        with pytest.raises(KeyError, match="never assigned"):
+            mt.ids_to_rows(np.asarray([bad], dtype=np.int64))
+    # mixed good/bad still raises, and a valid id resolves afterwards
+    with pytest.raises(KeyError, match="never assigned"):
+        mt.ids_to_rows(np.asarray([0, n], dtype=np.int64))
+    assert mt.ids_to_rows(np.asarray([0], dtype=np.int64))[0] == 0
+    # tombstoned-but-not-compacted ids still resolve (delete depends on it)
+    mt_keep = MultiTableIndex(_cfg(compact_threshold=None)).fit(corpus.x)
+    mt_keep.delete(np.asarray([3], dtype=np.int64))
+    assert mt_keep.ids_to_rows(np.asarray([3], dtype=np.int64))[0] == 3
+    # before fit: the guarded RuntimeError, not an AttributeError
+    with pytest.raises(RuntimeError, match="before fit"):
+        MultiTableIndex(_cfg()).ids_to_rows(np.asarray([0], dtype=np.int64))
+
+
 def test_query_batch_equals_query_loop(corpus, queries):
     """Batched path == loop of single queries, bit for bit."""
     mt = MultiTableIndex(_cfg(tables=4)).fit(corpus.x)
