@@ -32,6 +32,15 @@ regressed.  Two kinds of gate:
   recall that used to read 0.0 by chance is kept in the record but not
   gated.
 
+PR-7 adds two deterministic floors and one wall-clock floor: the modeled
+int16 candidate-packing ratio (``scan_cand_model`` at B=32, l=128) must
+stay >= 2x over the unpacked stream; the modeled seeded-projection hash
+traffic ratio (``hash_traffic_model`` at B=32, d=64, k=128) must stay
+>= 2x over materialized weights; and on the bigger-than-VMEM ``big_table``
+sweep row the fused scan must keep >= 0.9x the unfused QPS measured on
+that same table (streaming a table VMEM can't pin must not surrender the
+fused win; committed ~2x).
+
 The gate also refuses a record with no ``serving_async`` sweep rows (or
 inconsistent shed/completion accounting) and one with no ``kernel_sweep``
 rows — the selection-sweep telemetry must keep flowing into the
@@ -62,6 +71,9 @@ SWEEP_L128_FLOOR = 1.0       # PR-5: hist no slower than argmin at l=128
 RECALL_FLOOR = 0.5           # PR-5: deep-scan recall@20 gauge (reads ~1.0)
 MIXED_SOAK_COMPACTIONS = 2   # PR-6: soak must cross >=2 compaction cycles
 MIXED_PAUSE_CAP_MS = 3000.0  # PR-6: no query may stall behind a compaction
+CAND_PACK_FLOOR = 2.0        # PR-7: int16 packing halves candidate bytes
+HASH_SEEDED_FLOOR = 2.0      # PR-7: seeded projections vs weight stream
+BIG_TABLE_FLOOR = 0.9        # PR-7: >VMEM table fused-vs-unfused QPS
 
 
 def _fail(failures: list[str], msg: str) -> None:
@@ -103,6 +115,31 @@ def check(fresh: dict, baseline: dict | None) -> list[str]:
     else:
         _ok(f"modeled l=128 select-cost ratio {sel['ratio']:.1f}x "
             f">= {SELECT_MODEL_FLOOR}x")
+
+    # -- candidate packing: int16 pairs must halve the candidate stream -----
+    # (deterministic: kernels.ops.scan_cand_model arithmetic at B=32, l=128)
+    pm = fresh.get("model_cand_bytes", {}).get("b32_l128")
+    if pm is None:
+        _fail(failures, "no model_cand_bytes b32_l128 row in fresh record")
+    elif pm["cand_ratio"] < CAND_PACK_FLOOR:
+        _fail(failures, f"modeled candidate-packing ratio "
+                        f"{pm['cand_ratio']:.2f}x < {CAND_PACK_FLOOR}x floor")
+    else:
+        _ok(f"modeled candidate-packing ratio {pm['cand_ratio']:.2f}x "
+            f">= {CAND_PACK_FLOOR}x (fused total "
+            f"{pm['fused_ratio']:.2f}x)")
+
+    # -- seeded projections: the query hash pass must shed its weights ------
+    # (deterministic: kernels.ops.hash_traffic_model at B=32, d=64, k=128)
+    hm = fresh.get("model_hash_bytes", {}).get("query_b32")
+    if hm is None:
+        _fail(failures, "no model_hash_bytes query_b32 row in fresh record")
+    elif hm["ratio"] < HASH_SEEDED_FLOOR:
+        _fail(failures, f"modeled seeded-hash traffic ratio "
+                        f"{hm['ratio']:.2f}x < {HASH_SEEDED_FLOOR}x floor")
+    else:
+        _ok(f"modeled seeded-hash traffic ratio {hm['ratio']:.2f}x "
+            f">= {HASH_SEEDED_FLOOR}x")
 
     # -- fused-vs-unfused kernel QPS at the batched point -------------------
     batched = [k for k in fresh["kernel_ms"] if k != "b1"]
@@ -148,6 +185,28 @@ def check(fresh: dict, baseline: dict | None) -> list[str]:
         else:
             _ok(f"l=128 hist-vs-argmin QPS ratio {sw_ratio:.2f}x "
                 f"(b={r['b']})")
+
+    # -- bigger-than-VMEM table: streaming must not fall off a cliff --------
+    # wall-clock with headroom: the fused scan's QPS win over the unfused
+    # path is compared on the SAME >VMEM table (committed ~2x), so both
+    # sides stream from the same memory tier — a per-point comparison
+    # against the small table would measure the CI runner's cache
+    # hierarchy, not the kernel.  0.9x leaves noise room while catching a
+    # streaming bug (e.g. the grid re-fetching queries per code block).
+    big = [r for r in sweep if r.get("big_table")]
+    if not big:
+        _fail(failures, "no big_table kernel_sweep row in fresh record")
+    else:
+        r = big[0]
+        big_ratio = r["unfused_ms"] / r["hist_ms"]
+        if big_ratio < BIG_TABLE_FLOOR:
+            _fail(failures, f"big-table ({r.get('code_mb', 0):.1f} MB > "
+                            f"VMEM) fused QPS {big_ratio:.2f}x of unfused "
+                            f"< {BIG_TABLE_FLOOR}x floor (the fused win "
+                            f"did not survive streaming)")
+        else:
+            _ok(f"big-table ({r.get('code_mb', 0):.1f} MB > VMEM) fused "
+                f"QPS {big_ratio:.2f}x of unfused")
 
     # -- deep-scan recall gauge (data-seeded, not timed) --------------------
     recall_keys = [k for k in fresh["serving"]

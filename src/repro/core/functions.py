@@ -31,6 +31,77 @@ def _sgn(x):
 
 
 # ---------------------------------------------------------------------------
+# Seed-generated projections: deterministic counter-based N(0, 1)
+# ---------------------------------------------------------------------------
+#
+# The bilinear factorization makes the projections cheap enough to regenerate
+# on the fly: instead of streaming materialized (d, k) factors from HBM on
+# every hash launch, the Pallas kernel re-derives U/V values in-register from
+# a 32-bit per-table seed.  The generator is COUNTER-based (a murmur3-style
+# finalizer chain over the absolute (row, col) indices, then Box-Muller):
+# the value at (seed, tag, row, col) never depends on tiling, padding,
+# backend, or evaluation order, so the kernel and the pure-jnp oracle below
+# are bit-identical by construction.  This is deliberately NOT the hardware
+# TPU PRNG (pltpu.prng_random_bits): the hardware stream cannot be reproduced
+# by a jnp oracle, and the repo's parity contract (every CI leg bit-identical
+# in interpret mode) is load-bearing for the serving tests.
+
+_GOLD = 0x9E3779B9       # 2^32 / golden ratio — per-matrix seed spacing
+_FNV = 0x01000193        # FNV prime — decorrelates the row counter pre-mix
+
+
+def _fmix32(h):
+    """murmur3 32-bit finalizer: a full-avalanche mix on uint32 lanes
+    (every elementwise op here exists on the TPU VPU and in interpret)."""
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def seeded_gaussian(seed, tag: int, rows, cols):
+    """Deterministic N(0, 1) f32 values at absolute (row, col) positions.
+
+    seed: uint32 scalar (python int or traced); tag: which matrix of the
+    family (0 = U, 1 = V); rows/cols: broadcastable int32 index arrays.
+    Two decorrelated uniform streams feed one Box-Muller branch; uniforms
+    are mapped to (0, 1) as (bits>>8 + 0.5) * 2^-24, so log never sees 0.
+    """
+    s = _fmix32(jnp.uint32(seed) + jnp.uint32(tag) * jnp.uint32(_GOLD))
+    h = _fmix32(s ^ (rows.astype(jnp.uint32) * jnp.uint32(_FNV)))
+    h = _fmix32(h ^ cols.astype(jnp.uint32))
+    b1 = _fmix32(h ^ jnp.uint32(0x632BE59B))
+    b2 = _fmix32(h ^ jnp.uint32(0x2545F491))
+    u1 = ((b1 >> jnp.uint32(8)).astype(jnp.float32) + jnp.float32(0.5)) \
+        * jnp.float32(2.0 ** -24)
+    u2 = ((b2 >> jnp.uint32(8)).astype(jnp.float32) + jnp.float32(0.5)) \
+        * jnp.float32(2.0 ** -24)
+    r = jnp.sqrt(jnp.float32(-2.0) * jnp.log(u1))
+    return (r * jnp.cos(jnp.float32(2.0 * jnp.pi) * u2)).astype(jnp.float32)
+
+
+def seeded_projections(seed, d: int, k: int):
+    """Pure-jnp oracle of the in-kernel generator: the (d, k) U, V factors a
+    seed denotes.  kernels.bilinear_hash.bilinear_hash_seeded_kernel computes
+    exactly these values tile-by-tile from the same arithmetic, so
+    ``ops.bilinear_hash(x, *seeded_projections(s, d, k))`` is bit-identical
+    to ``ops.bilinear_hash_seeded(x, s, k)``."""
+    rows = jnp.arange(d, dtype=jnp.int32)[:, None]
+    cols = jnp.arange(k, dtype=jnp.int32)[None, :]
+    return (seeded_gaussian(seed, 0, rows, cols),
+            seeded_gaussian(seed, 1, rows, cols))
+
+
+def seed_from_key(key) -> int:
+    """Collapse a jax PRNG key to the 32-bit table seed the kernel consumes.
+    Deterministic in the key, so two indexes built from the same key (e.g.
+    HyperplaneIndex and MultiTableIndex table 0) derive the same family."""
+    return int(jax.random.bits(key, (), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
 # BH-Hash (bilinear, eq. 6)
 # ---------------------------------------------------------------------------
 
@@ -73,6 +144,30 @@ class BHHash:
 
     def hash_query(self, w):
         return pack_signs(self.signs_query(w))
+
+
+@dataclasses.dataclass(frozen=True)
+class SeededBHHash(BHHash):
+    """BH family whose projections are seed-generated, not sampled.
+
+    Same evaluation contract as BHHash — u/v are materialized here once at
+    creation (they are small: 2·d·k floats) so every pure-jnp path, the
+    probe tables, and the stacked batch-query hashing work unchanged.  The
+    point of the seed is the KERNEL path: ``ops.bilinear_hash_seeded`` /
+    the grouped serving hash regenerate U, V in-register from ``seed`` and
+    never read projection weights from HBM, so hashing L tables streams
+    only the points and the packed codes (see kernels/README.md).  Parity:
+    ``u, v == seeded_projections(seed, d, k)`` exactly, and the kernel
+    computes those same values tile-by-tile.
+    """
+
+    seed: int = 0
+
+    @classmethod
+    def create(cls, key, d: int, k: int, dtype=jnp.float32) -> "SeededBHHash":
+        seed = seed_from_key(key)
+        u, v = seeded_projections(seed, d, k)
+        return cls(u.astype(dtype), v.astype(dtype), seed)
 
 
 # ---------------------------------------------------------------------------

@@ -68,6 +68,18 @@ class IndexConfig:
     # hist).  Bit-identical results either way; deep scans (l in the
     # hundreds, for recall) are only cheap under "hist".
     fused_select: str | None = None
+    # method="bh": derive the random bilinear factors from a 32-bit
+    # per-table seed (functions.SeededBHHash) so the kernel path hashes
+    # with ZERO projection-weight HBM reads — growing the table count L is
+    # then free on the hash side (see ops.hash_traffic_model).  False
+    # restores the classic jax.random.normal sampling.  Learned factors
+    # (method="lbh") always stay materialized.
+    seeded_projections: bool = True
+    # fused-scan candidate emission width: "16" (int16 pairs, half the
+    # candidate HBM/interconnect bytes), "8" (uint8 distances, k <= 224),
+    # or "none" (int32 escape hatch).  None honours REPRO_CAND_PACK
+    # (default 16).  Bit-identical results for every width.
+    cand_pack: str | None = None
 
 
 @dataclasses.dataclass
@@ -104,7 +116,8 @@ class HyperplaneIndex:
             self.family = F.EHHash.create(key, d, cfg.bits,
                                           sample_dims=cfg.eh_sample_dims)
         elif cfg.method == "bh":
-            self.family = F.BHHash.create(key, d, cfg.bits)
+            fam = F.SeededBHHash if cfg.seeded_projections else F.BHHash
+            self.family = fam.create(key, d, cfg.bits)
         elif cfg.method == "lbh":
             m = min(cfg.lbh_sample, x.shape[0])
             sel = jax.random.choice(jax.random.fold_in(key, 1), x.shape[0],
@@ -126,6 +139,10 @@ class HyperplaneIndex:
         cfg = self.config
         if cfg.use_kernels and cfg.method in ("bh", "lbh"):
             from repro.kernels import ops
+            if type(self.family) is F.SeededBHHash:
+                # seed-generated factors: zero projection-weight HBM reads
+                return ops.bilinear_hash_seeded(x, self.family.seed,
+                                                self.family.k)
             return ops.bilinear_hash(x, self.family.u, self.family.v)
         return self.family.hash_database(x)
 
@@ -158,7 +175,8 @@ class HyperplaneIndex:
         qcode = self.family.hash_query(w[None, :])[0]
         if self.config.use_kernels:
             from repro.kernels import ops
-            _, idx = ops.hamming_topk(self.codes, qcode, l)
+            _, idx = ops.hamming_topk(self.codes, qcode, l,
+                                      pack=self.config.cand_pack)
         else:
             _, idx = hamming_topk(self.codes, qcode, l)
         # l > n slots carry id -1 and always sit at the sorted tail — slice

@@ -56,6 +56,27 @@ def env_fused_select(select: str | None = None) -> str:
     return env if env in ("hist", "argmin") else "hist"
 
 
+def env_cand_pack(pack: str | None = None) -> str:
+    """Resolve the fused-scan candidate emission width: ``"16"`` (the
+    default — int16 (dist, id) pairs, half the candidate HBM/interconnect
+    bytes), ``"8"`` (uint8 distances + int16 ids, only legal while
+    32·W < 255, i.e. k <= 224 — kernels.hamming.cand_encoding guards), or
+    ``"none"`` (the int32 escape hatch, e.g. for a backend whose narrow
+    stores misbehave).  Explicit arguments win; otherwise the
+    ``REPRO_CAND_PACK`` env var moves the default.  Packing only narrows
+    what leaves a kernel block / crosses the interconnect — every pack is
+    bit-identical after the widening merge, so the knob trades bytes, not
+    answers.  The pure-jnp scan paths have no block emission to narrow;
+    they accept-and-ignore the knob and match by construction."""
+    if pack is not None:
+        if pack not in ("none", "16", "8"):
+            raise ValueError(f"cand_pack must be 'none', '16' or '8', "
+                             f"got {pack!r}")
+        return pack
+    env = os.environ.get("REPRO_CAND_PACK", "").strip().lower()
+    return env if env in ("none", "16", "8") else "16"
+
+
 def _pad_topk(dists, ids, l: int):
     """Pad the trailing top-k axis out to l slots with the impossible-slot
     contract shared by every scan path: (DIST_SENTINEL, id -1)."""
@@ -104,7 +125,7 @@ def hamming_topk_batch(codes, queries, l: int):
 
 
 def hamming_topk_grouped(codes, queries, l: int, select: str | None = None,
-                         active=None):
+                         active=None, pack: str | None = None):
     """Grouped scan, pure-jnp: group g's queries vs group g's codes only.
 
     Same contract as kernels.ops.hamming_topk_grouped (the Pallas fused
@@ -122,7 +143,13 @@ def hamming_topk_grouped(codes, queries, l: int, select: str | None = None,
     result is the top-l of the live rows alone with (DIST_SENTINEL, -1) in
     impossible slots.  Traced (not a jit key): mutable-index serving flips
     tombstones without retracing the scan.
+
+    pack is accepted for call-site symmetry with the kernel path and
+    ignored: candidate packing narrows a kernel block's HBM emission, and
+    the jnp scans have no block emission — their merged output equals every
+    packed variant by construction (the parity suite asserts it).
     """
+    del pack
     if env_fused_select(select) == "hist":
         return hamming_topk_grouped_hist(codes, queries, l, active)
     return _grouped_topk_lax(codes, queries, l, active)
@@ -247,30 +274,78 @@ def drop_tombstones_topk(dists, ids, active, l: int):
     return _pad_topk(d[..., :l], i[..., :l], l)
 
 
+# interconnect packing (the sharded analogue of the kernels' candidate
+# packing): what crosses the all-gather is bounded exactly like a kernel
+# block's emission — distances <= 32·W, ids SHARD-LOCAL (< shard rows) with
+# the global offset reconstructed after the gather from each row's position
+# on the gather axis.  int16 halves the gather bytes; the post-gather widen
+# restores the identical int32 values, so the merge (and its tie order) is
+# unchanged bit for bit.
+_SENT16 = 0x7FFF      # kernels.hamming.CAND_SENTINELS["16"]
+
+
+def _narrow_gather(cd, ci, pack: str, w: int, rows: int):
+    """Narrow one shard's (…, l) candidate lists for the all-gather.
+    Sentinel distances (DIST_SENTINEL) clamp to the int16 sentinel; -1 ids
+    survive the int16 cast.  Returns (cd, ci, packed_d, packed_i) — either
+    array stays int32 when its values don't fit the narrow dtype
+    (32·W >= the int16 sentinel, or shard rows past the int16 id range)."""
+    pack_d = pack != "none" and 32 * w < _SENT16
+    pack_i = pack != "none" and rows - 1 <= _SENT16
+    if pack_d:
+        cd = jnp.minimum(cd, _SENT16).astype(jnp.int16)
+    if pack_i:
+        ci = ci.astype(jnp.int16)
+    return cd, ci, pack_d, pack_i
+
+
+def _widen_gather(all_d, all_i, pack_d: bool, pack_i: bool, rows: int,
+                  axis_dim: int):
+    """Undo _narrow_gather after the all-gather: widen to int32, map the
+    int16 sentinel back to DIST_SENTINEL, and add each shard's global row
+    offset (shard position on the gather axis × shard rows) back to the
+    non-sentinel ids."""
+    shards = all_d.shape[0]
+    if pack_d:
+        all_d = all_d.astype(jnp.int32)
+        all_d = jnp.where(all_d == _SENT16, jnp.int32(DIST_SENTINEL), all_d)
+    if pack_i:
+        all_i = all_i.astype(jnp.int32)
+    shape = [shards] + [1] * (all_i.ndim - 1)
+    offsets = (jnp.arange(shards, dtype=jnp.int32) * rows).reshape(shape)
+    return all_d, jnp.where(all_i < 0, -1, all_i + offsets)
+
+
 def _local_then_merge(codes_shard, query, l: int, axis: str,
-                      use_kernel: bool, select: str):
+                      use_kernel: bool, select: str, pack: str):
     if use_kernel:
         # fused Pallas scan+select: the shard's distance vector stays in
         # VMEM; only l (distance, id) pairs reach HBM before the gather.
         from repro.kernels import ops
-        cand_d, idx = ops.hamming_topk(codes_shard, query, l, select=select)
+        cand_d, idx = ops.hamming_topk(codes_shard, query, l, select=select,
+                                       pack=pack)
     else:
         d = hamming_packed(codes_shard, query[None, :])
         neg, idx = jax.lax.top_k(-d, min(l, d.shape[0]))
         cand_d, idx = _pad_topk(-neg, idx, l)
-    offset = jax.lax.axis_index(axis) * codes_shard.shape[0]
-    # impossible slots (l > shard rows) stay -1 instead of aliasing the
-    # previous shard's last row once the offset is added
-    cand_i = jnp.where(idx < 0, -1, idx + offset).astype(jnp.int32)
-    all_d = jax.lax.all_gather(cand_d, axis).reshape(-1)
-    all_i = jax.lax.all_gather(cand_i, axis).reshape(-1)
+    rows, w = codes_shard.shape
+    # ids stay SHARD-LOCAL across the gather (impossible slots stay -1);
+    # the global offset is recovered from the gather-axis position.
+    cand_i = jnp.where(idx < 0, -1, idx).astype(jnp.int32)
+    cand_d, cand_i, pk_d, pk_i = _narrow_gather(cand_d, cand_i, pack, w,
+                                                rows)
+    all_d = jax.lax.all_gather(cand_d, axis)             # (S, l)
+    all_i = jax.lax.all_gather(cand_i, axis)
+    all_d, all_i = _widen_gather(all_d, all_i, pk_d, pk_i, rows, 0)
+    all_d, all_i = all_d.reshape(-1), all_i.reshape(-1)
     neg2, sel = jax.lax.top_k(-all_d, l)
     return -neg2, all_i[sel]
 
 
 def hamming_topk_sharded(codes, query, l: int, mesh, axis: str = "data",
                          use_kernel: bool | None = None,
-                         select: str | None = None):
+                         select: str | None = None,
+                         pack: str | None = None):
     """Distributed top-l Hamming scan over a row-sharded code table.
 
     codes must be shardable by `axis` on dim 0.  Returns replicated
@@ -284,17 +359,19 @@ def hamming_topk_sharded(codes, query, l: int, mesh, axis: str = "data",
     if use_kernel is None:
         use_kernel = env_use_kernels(True)
     select = env_fused_select(select)
-    return _sharded_fn(mesh, axis, l, use_kernel, select)(codes, query)
+    pack = env_cand_pack(pack)
+    return _sharded_fn(mesh, axis, l, use_kernel, select, pack)(codes, query)
 
 
 @lru_cache(maxsize=256)
-def _sharded_fn(mesh, axis: str, l: int, use_kernel: bool, select: str):
+def _sharded_fn(mesh, axis: str, l: int, use_kernel: bool, select: str,
+                pack: str):
     """Jitted shard_map closure for hamming_topk_sharded, cached per
-    (mesh, axis, l, use_kernel, select) so steady serving traffic doesn't
-    rebuild and re-trace the distributed scan on every call."""
+    (mesh, axis, l, use_kernel, select, pack) so steady serving traffic
+    doesn't rebuild and re-trace the distributed scan on every call."""
     return jax.jit(shard_map_compat(
         partial(_local_then_merge, l=l, axis=axis, use_kernel=use_kernel,
-                select=select),
+                select=select, pack=pack),
         mesh=mesh,
         in_specs=(P(axis, None), P()),
         out_specs=(P(), P()),
@@ -303,32 +380,39 @@ def _sharded_fn(mesh, axis: str, l: int, use_kernel: bool, select: str):
 
 def _grouped_local_then_merge(codes_shard, queries, l: int, l_local: int,
                               n_valid: int, axis: str, use_kernel: bool,
-                              select: str):
+                              select: str, pack: str):
     """Local grouped scan + small all-gather merge for one shard.
 
     codes_shard: (G, rows, W) — this shard's contiguous row range of every
     group; queries: (G, B, W) replicated.  Emits the shard's top-l_local
-    per (group, query) with global row ids, then lex-sorts the gathered
-    S·l_local candidates by (distance, id) so ties resolve to the lowest
-    global id, exactly like the single-device grouped scan.
+    per (group, query), carries SHARD-LOCAL ids (narrowed per ``pack``)
+    across the gather, then widens, restores global row ids from each row's
+    gather-axis position, and lex-sorts the S·l_local candidates by
+    (distance, id) so ties resolve to the lowest global id, exactly like
+    the single-device grouped scan.
     """
     if use_kernel:
         from repro.kernels import ops
         cd, ci = ops.hamming_topk_grouped(codes_shard, queries, l_local,
-                                          select=select)
+                                          select=select, pack=pack)
     else:
         cd, ci = hamming_topk_grouped(codes_shard, queries, l_local,
-                                      select=select)
-    offset = jax.lax.axis_index(axis) * codes_shard.shape[1]
-    gi = jnp.where(ci < 0, -1, ci + offset).astype(jnp.int32)
+                                      select=select, pack=pack)
+    rows, w = codes_shard.shape[1], codes_shard.shape[2]
+    offset = jax.lax.axis_index(axis) * rows
     # rows past the true table end (shard-divisibility padding) turn into
     # sentinel slots; l_local = l + pad_rows guarantees they could not have
-    # crowded a real global-top-l row out of this shard's local list.
-    pad_row = gi >= n_valid
+    # crowded a real global-top-l row out of this shard's local list.  The
+    # padding test needs the global id, but ids stay shard-local across the
+    # gather (they must fit the narrow dtype) — offsets come back in
+    # _widen_gather from the gather-axis position.
+    pad_row = (ci >= 0) & (ci + offset >= n_valid)
     cd = jnp.where(pad_row, jnp.int32(DIST_SENTINEL), cd)
-    gi = jnp.where(pad_row, -1, gi)
+    ci = jnp.where(pad_row, -1, ci).astype(jnp.int32)
+    cd, ci, pk_d, pk_i = _narrow_gather(cd, ci, pack, w, rows)
     all_d = jax.lax.all_gather(cd, axis)          # (S, G, B, l_local)
-    all_i = jax.lax.all_gather(gi, axis)
+    all_i = jax.lax.all_gather(ci, axis)
+    all_d, all_i = _widen_gather(all_d, all_i, pk_d, pk_i, rows, 0)
     g, b = queries.shape[0], queries.shape[1]
     all_d = jnp.moveaxis(all_d, 0, 2).reshape(g, b, -1)
     all_i = jnp.moveaxis(all_i, 0, 2).reshape(g, b, -1)
@@ -340,7 +424,8 @@ def hamming_topk_grouped_sharded(codes, queries, l: int, mesh,
                                  axis: str = "data",
                                  use_kernel: bool | None = None,
                                  n_valid: int | None = None,
-                                 select: str | None = None):
+                                 select: str | None = None,
+                                 pack: str | None = None):
     """Distributed grouped top-l scan: the multi-table analogue of
     ``hamming_topk_sharded``.
 
@@ -366,6 +451,7 @@ def hamming_topk_grouped_sharded(codes, queries, l: int, mesh,
     if use_kernel is None:
         use_kernel = env_use_kernels(True)
     select = env_fused_select(select)
+    pack = env_cand_pack(pack)
     g, n, w = codes.shape
     if n_valid is None:
         n_valid = n
@@ -376,13 +462,13 @@ def hamming_topk_grouped_sharded(codes, queries, l: int, mesh,
     n_pad = n + pad
     l_local = l + min(n_pad - n_valid, n_pad // shards)
     fn = _grouped_sharded_fn(mesh, axis, l, l_local, n_valid, use_kernel,
-                             select)
+                             select, pack)
     return fn(codes, queries)
 
 
 @lru_cache(maxsize=256)
 def _grouped_sharded_fn(mesh, axis: str, l: int, l_local: int, n_valid: int,
-                        use_kernel: bool, select: str):
+                        use_kernel: bool, select: str, pack: str):
     """Jitted shard_map closure for hamming_topk_grouped_sharded, cached so
     the serving scan hot path doesn't rebuild and re-trace the distributed
     scan on every micro-batch (n_valid changes per index mutation, so churn
@@ -390,7 +476,7 @@ def _grouped_sharded_fn(mesh, axis: str, l: int, l_local: int, n_valid: int,
     return jax.jit(shard_map_compat(
         partial(_grouped_local_then_merge, l=l, l_local=l_local,
                 n_valid=n_valid, axis=axis, use_kernel=use_kernel,
-                select=select),
+                select=select, pack=pack),
         mesh=mesh,
         in_specs=(P(None, axis, None), P()),
         out_specs=(P(), P()),

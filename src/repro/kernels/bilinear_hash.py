@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.functions import seeded_gaussian
 from repro.kernels.pallas_compat import CompilerParams
 
 WORD = 32
@@ -42,12 +43,7 @@ def _kernel(x_ref, u_ref, v_ref, out_ref, acc_u, acc_v, *, n_d_steps: int):
 
     @pl.when(dstep == n_d_steps - 1)
     def _finalize():
-        prod = acc_u[...] * acc_v[...]                 # (BN, BK)
-        bits = (prod >= 0).astype(jnp.uint32)          # sgn(0) = +1
-        bn, bk = bits.shape
-        bits = bits.reshape(bn, bk // WORD, WORD)
-        weights = jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32)
-        out_ref[...] = (bits * weights).sum(axis=-1, dtype=jnp.uint32)
+        out_ref[...] = _pack_sign_bits(acc_u[...] * acc_v[...])
 
 
 @functools.partial(
@@ -80,3 +76,85 @@ def bilinear_hash_kernel(x, u, v, *, block_n: int = 256, block_k: int = 128,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, u, v)
+
+
+def _pack_sign_bits(prod):
+    bits = (prod >= 0).astype(jnp.uint32)          # sgn(0) = +1
+    bn, bk = bits.shape
+    bits = bits.reshape(bn, bk // WORD, WORD)
+    weights = jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32)
+    return (bits * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def _seeded_kernel(seed_ref, x_ref, out_ref, acc_u, acc_v, *,
+                   n_d_steps: int, block_d: int, block_k: int):
+    """Grid step of the seed-generated hash: identical tiling, accumulation
+    order and finalize as ``_kernel``, except the (BD, BK) U/V tiles are
+    regenerated in-register from this group's seed instead of being streamed
+    from HBM.  The generator is indexed by ABSOLUTE (row, col) — the tile's
+    values equal the matching slice of core.functions.seeded_projections, so
+    the packed codes are bit-identical to the materialized kernel fed the
+    oracle's U, V (pad rows of x are zero, so the garbage gaussians generated
+    past the true d contribute exactly 0.0 to every accumulator lane)."""
+    j, s = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_u[...] = jnp.zeros_like(acc_u)
+        acc_v[...] = jnp.zeros_like(acc_v)
+
+    seed = seed_ref[0, 0]
+    rows = (jax.lax.broadcasted_iota(jnp.int32, (block_d, block_k), 0)
+            + s * block_d)
+    cols = (jax.lax.broadcasted_iota(jnp.int32, (block_d, block_k), 1)
+            + j * block_k)
+    u = seeded_gaussian(seed, 0, rows, cols)
+    v = seeded_gaussian(seed, 1, rows, cols)
+    x = x_ref[...]
+    acc_u[...] += jnp.dot(x, u, preferred_element_type=jnp.float32)
+    acc_v[...] += jnp.dot(x, v, preferred_element_type=jnp.float32)
+
+    @pl.when(s == n_d_steps - 1)
+    def _finalize():
+        out_ref[0] = _pack_sign_bits(acc_u[...] * acc_v[...])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "block_n", "block_k", "block_d", "interpret"))
+def bilinear_hash_seeded_kernel(x, seeds, *, k: int, block_n: int = 256,
+                                block_k: int = 128, block_d: int = 512,
+                                interpret: bool = False):
+    """Grouped seed-generated hash: codes for G tables in ONE launch with
+    zero projection-weight HBM reads.
+
+    x: (n, d) f32 shared by all tables; seeds: (G, 1) uint32 per-table
+    seeds.  Preconditions as ``bilinear_hash_kernel`` (ops.py pads).
+    Returns (G, n, k // 32) uint32 — group g bit-identical to
+    ``bilinear_hash_kernel(x, *seeded_projections(seeds[g], d, k))``.
+    HBM traffic is G·(n·d·4 + n·k/8) + x re-reads — the 2·d·k·4·G weight
+    stream of the materialized path never exists (hash_traffic_model in
+    ops.py counts both)."""
+    n, d = x.shape
+    g = seeds.shape[0]
+    grid = (g, n // block_n, k // block_k, d // block_d)
+    return pl.pallas_call(
+        functools.partial(_seeded_kernel, n_d_steps=grid[3],
+                          block_d=block_d, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda t, i, j, s: (t, 0)),
+            pl.BlockSpec((block_n, block_d), lambda t, i, j, s: (i, s)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n, block_k // WORD),
+                               lambda t, i, j, s: (t, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, n, k // WORD), jnp.uint32),
+        scratch_shapes=[
+            pltpu.VMEM((block_n, block_k), jnp.float32),
+            pltpu.VMEM((block_n, block_k), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(seeds, x)

@@ -61,6 +61,45 @@ from repro.kernels.pallas_compat import CompilerParams
 # real Hamming distance (<= 32·W) but negatable in int32.
 DIST_SENTINEL = 0x3FFFFFFF
 
+# Narrow-width candidate emission.  A fused-scan block only ever emits
+# bounded values: distances <= 32·W and BLOCK-LOCAL row ids < block_n, so
+# the (dist, id) pairs can leave VMEM as int16 (or uint8 distances where
+# 32·W fits) and be widened at the tiny merge — the candidate term of the
+# HBM traffic model shrinks 2x (int16) / 2.67x (uint8+int16); see
+# ops.scan_traffic_model.  Each narrow dtype carries its own sentinel (its
+# max value) so masked / impossible slots still sort after every real
+# distance after packing; cand_encoding() is the overflow guard that keeps
+# that ordering sound.
+CAND_SENTINELS = {"none": DIST_SENTINEL, "16": 0x7FFF, "8": 0xFF}
+_CAND_ID_MAX = 0x7FFF                  # ids are int16 in both narrow packs
+
+
+def cand_encoding(pack: str, w: int, block_n: int):
+    """Resolve a candidate pack name to (dist_dtype, id_dtype, sentinel).
+
+    The guard: real distances (<= 32·W) must stay STRICTLY below the narrow
+    sentinel — otherwise a genuine max-distance row would collide with the
+    masked-slot encoding and sort as if dead — and block-local row ids
+    (< block_n) must fit the id dtype.  Raises ValueError on overflow
+    instead of silently corrupting the tie/sentinel contract.
+    """
+    if pack not in CAND_SENTINELS:
+        raise ValueError(f"cand pack must be one of {sorted(CAND_SENTINELS)},"
+                         f" got {pack!r}")
+    sent = CAND_SENTINELS[pack]
+    if pack == "none":
+        return jnp.int32, jnp.int32, sent
+    if 32 * w >= sent:
+        raise ValueError(
+            f"cand pack {pack!r}: max Hamming distance 32·W = {32 * w} "
+            f"would reach the narrow sentinel {sent} — masked slots could "
+            f"no longer sort after real candidates (use a wider pack)")
+    if block_n - 1 > _CAND_ID_MAX:
+        raise ValueError(
+            f"cand pack {pack!r}: block_n = {block_n} exceeds the int16 "
+            f"block-local id range ({_CAND_ID_MAX + 1})")
+    return (jnp.int16 if pack == "16" else jnp.uint8), jnp.int16, sent
+
 
 def _popcount_u32(x):
     x = x - ((x >> 1) & jnp.uint32(0x55555555))
@@ -103,7 +142,8 @@ def _batch_kernel(codes_ref, queries_ref, out_ref, *, n_words: int):
 
 
 def _topk_fused_kernel(*refs, n_words: int, l: int, block_n: int,
-                       n_valid: int, masked: bool = False):
+                       n_valid: int, pack: str = "none",
+                       masked: bool = False):
     """One grid step: scan a (block_n, W) code tile against this group's B
     queries and emit the block-local smallest-l (distance, row-id) pairs.
 
@@ -111,6 +151,11 @@ def _topk_fused_kernel(*refs, n_words: int, l: int, block_n: int,
     — it is never written to HBM.  Selection is l rounds of masked argmin;
     ``jnp.min`` over the row-iota of the minima keeps ties deterministic
     (lowest row index wins), matching lax.top_k's stable order.
+
+    Emitted ids are BLOCK-LOCAL (< block_n) and distances are clamped to
+    the pack's sentinel, so both fit the narrow candidate dtype; the merge
+    in ops.py widens and adds the block base back.  Selection still runs on
+    the full int32 tile — only the HBM emission narrows.
 
     masked=True threads an extra (block_n, 1) int32 activity tile: rows
     whose flag is 0 (tombstones / pad) go to the sentinel before selection,
@@ -121,6 +166,7 @@ def _topk_fused_kernel(*refs, n_words: int, l: int, block_n: int,
          out_d_ref, out_i_ref, acc_ref) = refs
     else:
         codes_ref, queries_ref, out_d_ref, out_i_ref, acc_ref = refs
+    d_dtype, i_dtype, d_sent = cand_encoding(pack, n_words, block_n)
     # (block_n, W) codes vs this group's (B, W) queries, word-by-word XOR
     # on 2-D (BN, B) lanes — the natural VPU layout.
     acc = _popcount_tile(codes_ref[0], queries_ref[0], n_words)
@@ -140,8 +186,9 @@ def _topk_fused_kernel(*refs, n_words: int, l: int, block_n: int,
         dmin = jnp.min(acc, axis=0)                               # (B,)
         hit = acc == dmin[None, :]
         rmin = jnp.min(jnp.where(hit, rows, big_row), axis=0)     # (B,)
-        out_d_ref[0, 0, :, pl.dslice(j, 1)] = dmin[:, None]
-        out_i_ref[0, 0, :, pl.dslice(j, 1)] = (base + rmin)[:, None]
+        out_d_ref[0, 0, :, pl.dslice(j, 1)] = \
+            jnp.minimum(dmin, d_sent)[:, None].astype(d_dtype)
+        out_i_ref[0, 0, :, pl.dslice(j, 1)] = rmin[:, None].astype(i_dtype)
         acc_ref[...] = jnp.where(rows == rmin[None, :],
                                  jnp.int32(DIST_SENTINEL), acc)
         return _
@@ -150,17 +197,23 @@ def _topk_fused_kernel(*refs, n_words: int, l: int, block_n: int,
 
 
 @functools.partial(jax.jit, static_argnames=("l", "n_valid", "block_n",
-                                             "interpret"))
+                                             "interpret", "pack"))
 def hamming_topk_fused_kernel(codes, queries, l: int, n_valid: int, *,
                               active=None, block_n: int = 2048,
-                              interpret: bool = False):
+                              interpret: bool = False, pack: str = "none"):
     """Fused scan+select over G stacked code groups in ONE device launch.
 
     codes: (G, n_pad, W) uint32 with n_pad % block_n == 0; queries:
     (G, B, W) uint32; n_valid: live rows per group (rows >= n_valid are
-    padding).  Returns (dists, ids): (G, grid, B, l) int32 block-local
-    candidates, ids group-local in [0, n_pad); masked slots carry
-    DIST_SENTINEL.  l must satisfy l <= block_n.
+    padding).  Returns (dists, ids): (G, grid, B, l) block-local
+    candidates, ids LOCAL to each block (< block_n — the merge adds the
+    block base back); masked slots carry the pack's sentinel.  l must
+    satisfy l <= block_n.
+
+    pack selects the candidate emission width (``cand_encoding``): "none"
+    = int32 pairs, "16" = int16 pairs, "8" = uint8 distances + int16 ids.
+    Selection always runs on the int32 VMEM tile; only the HBM-bound
+    emission narrows, so results are bit-identical after widening.
 
     active: optional (n_pad, 1) int32 per-row activity flags, shared by all
     G groups; rows with flag 0 are masked to the sentinel before selection.
@@ -170,7 +223,9 @@ def hamming_topk_fused_kernel(codes, queries, l: int, n_valid: int, *,
     g, n_pad, w = codes.shape
     b = queries.shape[1]
     grid_n = n_pad // block_n
-    out_shape = jax.ShapeDtypeStruct((g, grid_n, b, l), jnp.int32)
+    d_dtype, i_dtype, _ = cand_encoding(pack, w, block_n)
+    out_shapes = [jax.ShapeDtypeStruct((g, grid_n, b, l), d_dtype),
+                  jax.ShapeDtypeStruct((g, grid_n, b, l), i_dtype)]
     in_specs = [
         pl.BlockSpec((1, block_n, w), lambda t, i: (t, i, 0)),
         pl.BlockSpec((1, b, w), lambda t, i: (t, 0, 0)),
@@ -181,7 +236,7 @@ def hamming_topk_fused_kernel(codes, queries, l: int, n_valid: int, *,
         operands.append(active)
     return pl.pallas_call(
         functools.partial(_topk_fused_kernel, n_words=w, l=l,
-                          block_n=block_n, n_valid=n_valid,
+                          block_n=block_n, n_valid=n_valid, pack=pack,
                           masked=active is not None),
         grid=(g, grid_n),
         in_specs=in_specs,
@@ -189,7 +244,7 @@ def hamming_topk_fused_kernel(codes, queries, l: int, n_valid: int, *,
             pl.BlockSpec((1, 1, b, l), lambda t, i: (t, i, 0, 0)),
             pl.BlockSpec((1, 1, b, l), lambda t, i: (t, i, 0, 0)),
         ],
-        out_shape=[out_shape, out_shape],
+        out_shape=out_shapes,
         scratch_shapes=[pltpu.VMEM((block_n, b), jnp.int32)],
         compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
@@ -226,8 +281,9 @@ def _hist_select(acc, base, l: int, n_valid: int, max_dist: int,
     exact smallest-l *set* per block (ties to lowest row); the second-stage
     lexicographic (distance, id) merge in ops.py restores sorted order.
 
-    Returns (out_d, out_i): (B, l) int32; slots past the live-row count
-    carry (DIST_SENTINEL, garbage id ≥ base) exactly like the exhausted
+    Returns (out_d, out_i): (B, l) int32 with BLOCK-LOCAL ids (< block_n;
+    the merge adds the block base back); slots past the live-row count
+    carry (DIST_SENTINEL, garbage local id) exactly like the exhausted
     slots of the argmin kernel — the merge maps them to id -1.
     """
     rows = jax.lax.broadcasted_iota(jnp.int32, acc.shape, 0)
@@ -277,11 +333,21 @@ def _hist_select(acc, base, l: int, n_valid: int, max_dist: int,
     d_sel = jnp.take_along_axis(acc, hi2, axis=0)             # (l, B)
     slot_ok = tj <= t
     out_d = jnp.where(slot_ok, d_sel, jnp.int32(DIST_SENTINEL))
-    return out_d.T, (base + hi2).T                            # (B, l) each
+    return out_d.T, hi2.T                                     # (B, l) each
+
+
+def _pack_cand(out_d, out_i, pack: str, n_words: int, block_n: int):
+    """Narrow one block's int32 (B, l) candidates to the pack's emission
+    dtypes: distances clamp to the narrow sentinel (real distances stay
+    strictly below it — cand_encoding guards), block-local ids just cast."""
+    d_dtype, i_dtype, d_sent = cand_encoding(pack, n_words, block_n)
+    return (jnp.minimum(out_d, d_sent).astype(d_dtype),
+            out_i.astype(i_dtype))
 
 
 def _topk_hist_kernel(*refs, n_words: int, l: int, block_n: int,
-                      n_valid: int, max_dist: int, masked: bool = False):
+                      n_valid: int, max_dist: int, pack: str = "none",
+                      masked: bool = False):
     """One grid step of the histogram-select fused scan (BlockSpec-streamed
     code tiles; see _topk_hist_dma_kernel for the manual-DMA variant).
     masked=True threads a (block_n, 1) int32 activity tile into the select
@@ -296,13 +362,14 @@ def _topk_hist_kernel(*refs, n_words: int, l: int, block_n: int,
     base = pl.program_id(1) * block_n
     out_d, out_i = _hist_select(acc, base, l, n_valid, max_dist, block_n,
                                 act)
-    out_d_ref[0, 0] = out_d
-    out_i_ref[0, 0] = out_i
+    out_d_ref[0, 0], out_i_ref[0, 0] = _pack_cand(out_d, out_i, pack,
+                                                  n_words, block_n)
 
 
 def _topk_hist_dma_kernel(*refs, n_words: int, l: int,
                           block_n: int, n_valid: int, max_dist: int,
-                          grid_n: int, masked: bool = False):
+                          grid_n: int, pack: str = "none",
+                          masked: bool = False):
     """Histogram-select step with a double-buffered HBM→VMEM code pipeline.
 
     The code stack stays in HBM (memory_space=ANY); each sequential step of
@@ -347,23 +414,28 @@ def _topk_hist_dma_kernel(*refs, n_words: int, l: int,
     acc = _popcount_tile(buf_ref[slot], queries_ref[0], n_words)
     out_d, out_i = _hist_select(acc, i * block_n, l, n_valid, max_dist,
                                 block_n, act)
-    out_d_ref[0, 0] = out_d
-    out_i_ref[0, 0] = out_i
+    out_d_ref[0, 0], out_i_ref[0, 0] = _pack_cand(out_d, out_i, pack,
+                                                  n_words, block_n)
 
 
 @functools.partial(jax.jit, static_argnames=("l", "n_valid", "block_n",
-                                             "interpret", "dma"))
+                                             "interpret", "dma", "pack"))
 def hamming_topk_hist_kernel(codes, queries, l: int, n_valid: int, *,
                              active=None, block_n: int = 2048,
-                             interpret: bool = False, dma: bool = False):
+                             interpret: bool = False, dma: bool = False,
+                             pack: str = "none"):
     """Histogram-select fused scan: same shapes, grid and block-local
-    candidate contract as ``hamming_topk_fused_kernel`` (masked slots carry
-    DIST_SENTINEL; each block's l slots hold the exact block-local
-    smallest-l set with ties to the lowest row index), but selection is the
-    two-pass counting-sort of ``_hist_select`` instead of l argmin rounds.
-    The per-block slot order differs from the argmin kernel (row order, not
-    distance order) — results are bit-identical after the (distance, id)
-    merge in ops.hamming_topk_grouped.
+    candidate contract as ``hamming_topk_fused_kernel`` (ids are BLOCK-LOCAL,
+    masked slots carry the pack's sentinel; each block's l slots hold the
+    exact block-local smallest-l set with ties to the lowest row index),
+    but selection is the two-pass counting-sort of ``_hist_select`` instead
+    of l argmin rounds.  The per-block slot order differs from the argmin
+    kernel (row order, not distance order) — results are bit-identical
+    after the (distance, id) merge in ops.hamming_topk_grouped.
+
+    pack narrows the candidate emission dtypes exactly as in
+    ``hamming_topk_fused_kernel`` ("none" / "16" / "8"); selection always
+    runs on the int32 VMEM tile.
 
     dma=True streams code tiles through the manually double-buffered async
     copy pipeline (the kernel then reads ``codes`` from HBM/ANY memory
@@ -377,7 +449,9 @@ def hamming_topk_hist_kernel(codes, queries, l: int, n_valid: int, *,
     b = queries.shape[1]
     grid_n = n_pad // block_n
     max_dist = 32 * w
-    out_shape = jax.ShapeDtypeStruct((g, grid_n, b, l), jnp.int32)
+    d_dtype, i_dtype, _ = cand_encoding(pack, w, block_n)
+    out_shapes = [jax.ShapeDtypeStruct((g, grid_n, b, l), d_dtype),
+                  jax.ShapeDtypeStruct((g, grid_n, b, l), i_dtype)]
     out_specs = [
         pl.BlockSpec((1, 1, b, l), lambda t, i: (t, i, 0, 0)),
         pl.BlockSpec((1, 1, b, l), lambda t, i: (t, i, 0, 0)),
@@ -395,12 +469,12 @@ def hamming_topk_hist_kernel(codes, queries, l: int, n_valid: int, *,
         return pl.pallas_call(
             functools.partial(_topk_hist_kernel, n_words=w, l=l,
                               block_n=block_n, n_valid=n_valid,
-                              max_dist=max_dist,
+                              max_dist=max_dist, pack=pack,
                               masked=active is not None),
             grid=(g, grid_n),
             in_specs=in_specs,
             out_specs=out_specs,
-            out_shape=[out_shape, out_shape],
+            out_shape=out_shapes,
             compiler_params=CompilerParams(
                 dimension_semantics=("arbitrary", "arbitrary")),
             interpret=interpret,
@@ -416,12 +490,12 @@ def hamming_topk_hist_kernel(codes, queries, l: int, n_valid: int, *,
     return pl.pallas_call(
         functools.partial(_topk_hist_dma_kernel, n_words=w, l=l,
                           block_n=block_n, n_valid=n_valid,
-                          max_dist=max_dist, grid_n=grid_n,
+                          max_dist=max_dist, grid_n=grid_n, pack=pack,
                           masked=active is not None),
         grid=(g, grid_n),
         in_specs=in_specs,
         out_specs=out_specs,
-        out_shape=[out_shape, out_shape],
+        out_shape=out_shapes,
         scratch_shapes=[
             pltpu.VMEM((2, block_n, w), jnp.uint32),  # double buffer
             pltpu.SemaphoreType.DMA((2,)),

@@ -11,9 +11,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.search import env_fused_select
-from repro.kernels.bilinear_hash import bilinear_hash_kernel
-from repro.kernels.hamming import (DIST_SENTINEL,
+from repro.core.search import env_cand_pack, env_fused_select
+from repro.kernels.bilinear_hash import (bilinear_hash_kernel,
+                                         bilinear_hash_seeded_kernel)
+from repro.kernels.hamming import (DIST_SENTINEL, cand_encoding,
                                    hamming_distance_batch_kernel,
                                    hamming_distance_kernel,
                                    hamming_topk_fused_kernel,
@@ -77,6 +78,58 @@ def bilinear_hash(x, u, v, *, block_n: int = 256, block_k: int = 128,
     return packed
 
 
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "block_k",
+                                             "block_d", "interpret"))
+def bilinear_hash_seeded_grouped(x, seeds, k: int, *, block_n: int = 256,
+                                 block_k: int = 128, block_d: int = 512,
+                                 interpret: bool | None = None):
+    """Packed seed-generated BH codes for G tables in ONE launch.
+
+    x: (n, d) shared by all tables; seeds: (G,) uint32 per-table seeds
+    (SeededBHHash.seed / seed_from_key).  Returns (G, n, ceil(k/32)) uint32
+    with group g bit-identical to
+    ``bilinear_hash(x, *seeded_projections(seeds[g], d, k))``:
+
+    - pad ROWS of x are zero, so the gaussians the kernel generates past
+      the true d multiply exactly 0.0 into every accumulator lane (a ±0.0
+      term never changes a float sum except in the sign of a zero total,
+      and the sign pack uses ``>= 0``, which both zeros satisfy);
+    - pad COLUMNS past the true k produce gaussian-derived bits where the
+      materialized path's zero-padded projections give sgn(0)=+1, but both
+      live past bit k and the same mask below forces them to 0.
+
+    Zero projection-weight HBM reads — this is the hashing half of the
+    HBM-minimal serving path (hash_traffic_model counts the win).
+    """
+    n, d = x.shape
+    w = n_words(k)
+    x = _pad_to(_pad_to(x.astype(jnp.float32), 0, block_n), 1, block_d)
+    k_pad = k + ((-k) % block_k)
+    codes = bilinear_hash_seeded_kernel(
+        x, seeds.reshape(-1, 1).astype(jnp.uint32), k=k_pad,
+        block_n=block_n, block_k=block_k, block_d=block_d,
+        interpret=_interpret_default(interpret))
+    codes = codes[:, :n, :w]
+    rem = k - (w - 1) * WORD
+    if rem < WORD:
+        mask = jnp.uint32((1 << rem) - 1)
+        codes = codes.at[:, :, -1].set(codes[:, :, -1] & mask)
+    return codes
+
+
+def bilinear_hash_seeded(x, seed, k: int, *, block_n: int = 256,
+                         block_k: int = 128, block_d: int = 512,
+                         interpret: bool | None = None):
+    """Single-table seed-generated hash: (n, ceil(k/32)) uint32 codes,
+    bit-identical to ``bilinear_hash(x, *seeded_projections(seed, d, k))``.
+    """
+    codes = bilinear_hash_seeded_grouped(
+        x, jnp.atleast_1d(jnp.asarray(seed, jnp.uint32)), k,
+        block_n=block_n, block_k=block_k, block_d=block_d,
+        interpret=interpret)
+    return codes[0]
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def hamming_distances(codes, query, *, block_n: int = 2048,
                       interpret: bool | None = None):
@@ -90,7 +143,8 @@ def hamming_distances(codes, query, *, block_n: int = 2048,
 
 
 def hamming_topk(codes, query, l: int, *, block_n: int = 4096,
-                 interpret: bool | None = None, select: str | None = None):
+                 interpret: bool | None = None, select: str | None = None,
+                 pack: str | None = None):
     """Smallest-l Hamming matches: (dists (l,), idx (l,)).
 
     Routed through the fused scan+select kernel — the full distance vector
@@ -99,7 +153,7 @@ def hamming_topk(codes, query, l: int, *, block_n: int = 4096,
     """
     d, idx = hamming_topk_grouped(codes[None], query[None, None, :], l,
                                   block_n=block_n, interpret=interpret,
-                                  select=select)
+                                  select=select, pack=pack)
     return d[0, 0], idx[0, 0]
 
 
@@ -119,7 +173,8 @@ def hamming_distances_batch(codes, queries, *, block_n: int = 2048,
 
 def hamming_topk_batch(codes, queries, l: int, *, block_n: int = 4096,
                        interpret: bool | None = None,
-                       select: str | None = None):
+                       select: str | None = None,
+                       pack: str | None = None):
     """Batched smallest-l matches: (dists (B, l), idx (B, l)).
 
     Fused scan+select: HBM traffic is the code table plus O(grid·B·l)
@@ -128,14 +183,14 @@ def hamming_topk_batch(codes, queries, l: int, *, block_n: int = 4096,
     """
     d, idx = hamming_topk_grouped(codes[None], queries[None], l,
                                   block_n=block_n, interpret=interpret,
-                                  select=select)
+                                  select=select, pack=pack)
     return d[0], idx[0]
 
 
 def hamming_topk_grouped(codes, queries, l: int, *, block_n: int = 4096,
                          interpret: bool | None = None,
                          select: str | None = None, dma: bool = False,
-                         active=None):
+                         active=None, pack: str | None = None):
     """Fused smallest-l scan over G stacked code groups, ONE kernel launch.
 
     codes: (G, n, W) uint32 — G sub-tables over the same row space (the
@@ -159,17 +214,25 @@ def hamming_topk_grouped(codes, queries, l: int, *, block_n: int = 4096,
     inside selection, so the result is the top-l of the live rows alone.
     Traced (NOT a jit key): mutable-index serving flips tombstones without
     recompiling the scan.
+
+    pack: candidate emission width — ``"16"`` (default; int16 (dist, id)
+    pairs, half the candidate HBM bytes), ``"8"`` (uint8 distances, legal
+    while 32·W < 255), or ``"none"`` (int32 escape hatch); None reads
+    REPRO_CAND_PACK.  Kernels emit BLOCK-LOCAL ids clamped to the pack's
+    sentinel; this wrapper widens at the merge (sentinel -> DIST_SENTINEL,
+    id += block base), so every pack is bit-identical end to end.
     """
     select = env_fused_select(select)
+    pack = env_cand_pack(pack)
     return _topk_grouped_impl(codes, queries, active, l, block_n=block_n,
                               interpret=_interpret_default(interpret),
-                              select=select, dma=dma)
+                              select=select, dma=dma, pack=pack)
 
 
 @functools.partial(jax.jit, static_argnames=("l", "block_n", "interpret",
-                                             "select", "dma"))
+                                             "select", "dma", "pack"))
 def _topk_grouped_impl(codes, queries, active, l: int, *, block_n: int,
-                       interpret: bool, select: str, dma: bool):
+                       interpret: bool, select: str, dma: bool, pack: str):
     g, n, w = codes.shape
     b = queries.shape[1]
     bn = _block_rows(n, block_n)
@@ -182,11 +245,24 @@ def _topk_grouped_impl(codes, queries, active, l: int, *, block_n: int,
     if select == "hist":
         cd, ci = hamming_topk_hist_kernel(
             padded, q, l_k, n, active=act, block_n=bn, interpret=interpret,
-            dma=dma)
+            dma=dma, pack=pack)
     else:
         cd, ci = hamming_topk_fused_kernel(
-            padded, q, l_k, n, active=act, block_n=bn, interpret=interpret)
+            padded, q, l_k, n, active=act, block_n=bn, interpret=interpret,
+            pack=pack)
     grid_n = cd.shape[1]
+    # widen the narrow block emission: the pack sentinel (the clamp of
+    # DIST_SENTINEL — real distances <= 32·W sit strictly below it, which
+    # cand_encoding guards) maps back to DIST_SENTINEL, and the block-local
+    # ids get their block's row base added.  Sentinel-slot ids (-1 + base)
+    # are garbage but harmless: their distance is DIST_SENTINEL, so the
+    # final where() below rewrites them to -1, and ties among sentinel
+    # slots collapse to identical (DIST_SENTINEL, -1) pairs.
+    _, _, d_sent = cand_encoding(pack, w, bn)
+    cd = cd.astype(jnp.int32)
+    cd = jnp.where(cd == d_sent, jnp.int32(DIST_SENTINEL), cd)
+    blk = (jnp.arange(grid_n, dtype=jnp.int32) * bn)[None, :, None, None]
+    ci = ci.astype(jnp.int32) + blk
     # second-stage merge over grid·l_k candidates per (group, query):
     # lexicographic (distance, id) sort keeps ties at the lowest id, exactly
     # like lax.top_k over the full distance row.
@@ -202,9 +278,29 @@ def _topk_grouped_impl(codes, queries, active, l: int, *, block_n: int,
     return cd, ci
 
 
+# bytes of one emitted (distance, id) candidate pair per pack width:
+# int32+int32, int16+int16, uint8+int16 (ids stay 16-bit — block-local row
+# numbers need the range; only the distance narrows further).
+CAND_PAIR_BYTES = {"none": 8, "16": 4, "8": 3}
+
+
+def scan_cand_model(n: int, b: int, l: int, block_n: int = 4096,
+                    g: int = 1, pack: str = "16") -> int:
+    """Modeled HBM bytes of the fused scan's candidate emission alone: the
+    (g, grid, B, l) block-local (distance, id) pairs, written once by the
+    kernel and read back once by the merge.  This is the term candidate
+    packing shrinks (2x for int16, 8/3x for uint8) and the term
+    check_regression.py gates — at B=32, l=128 it rivals the code stream
+    itself, so halving it is the difference between a scan that is
+    code-stream-bound and one that is not."""
+    bn = _block_rows(n, block_n)
+    grid = -(-n // bn)
+    return 2 * g * grid * b * min(l, bn) * CAND_PAIR_BYTES[pack]
+
+
 def scan_traffic_model(n: int, w: int, b: int, l: int = 16,
                        block_n: int = 4096, fused: bool = True,
-                       g: int = 1) -> int:
+                       g: int = 1, pack: str = "16") -> int:
     """Modeled HBM bytes for one batched Hamming scan launch.
 
     g is the group count of the launch: a grouped scan (G stacked
@@ -218,18 +314,38 @@ def scan_traffic_model(n: int, w: int, b: int, l: int = 16,
     the full g·(n, B) int32 distance matrices for lax.top_k (2·g·n·B·4).
     Fused: stream the code groups once plus write and read back only the
     (g, grid, B, l) block-local candidate (distance, id) pairs
-    (2·g·grid·B·l·8).  Query bytes (g·B·W·4) are counted for both; at
-    B=32, k=128, l=16, block_n=4096 the fused path cuts traffic ~15x
-    (272 -> ~18 bytes/point, any g).  Selection algorithm (hist/argmin)
-    does not change traffic — both kernels emit the same candidate pairs;
-    see scan_select_model for the term that differs.
+    (scan_cand_model; ``pack`` picks the pair width — "16" is the serving
+    default, "none" the int32 legacy).  Query bytes (g·B·W·4) are counted
+    for both; at B=32, k=128, l=16, block_n=4096 the fused int16 path cuts
+    traffic ~16x vs unfused (272 -> ~17 bytes/point, any g; the code
+    stream's 16 bytes/point bound the ratio at ~17x regardless of pack).
+    Selection algorithm (hist/argmin) does not change traffic — both
+    kernels emit the same candidate pairs; see scan_select_model for the
+    term that differs.
     """
-    bn = _block_rows(n, block_n)
     code_bytes = g * (n * w * 4 + b * w * 4)
     if not fused:
         return code_bytes + 2 * g * n * b * 4
-    grid = -(-n // bn)
-    return code_bytes + 2 * g * grid * b * min(l, bn) * 8
+    return code_bytes + scan_cand_model(n, b, l, block_n, g, pack)
+
+
+def hash_traffic_model(n: int, d: int, k: int, g: int = 1,
+                       seeded: bool = False) -> int:
+    """Modeled HBM bytes for hashing n points into G tables of k bits.
+
+    Per table: stream the points (n·d·4), stream the materialized (d, k)
+    U, V factors (2·d·k·4) — or NOTHING when ``seeded`` (the kernel
+    regenerates the factors in-register from the table's 32-bit seed) —
+    and write the packed codes (n·W·4).  At serving shapes the weight
+    stream dominates small-batch hashing (B=32, d=64, k=128: 74240 vs
+    8704 bytes per table, an 8.5x cut), and it is the only term that
+    scales with L for a FIXED query batch — seeded hashing makes growing
+    L free on the hash side.  The point stream is counted once per table
+    (the grouped kernel re-reads x per group; grid reuse across g is a
+    compiler choice we don't model)."""
+    w = n_words(k)
+    weights = 0 if seeded else 2 * d * k * 4
+    return g * (n * d * 4 + weights + n * w * 4)
 
 
 def scan_select_model(n: int, b: int, l: int = 16, k: int = 128,

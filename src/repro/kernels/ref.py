@@ -3,13 +3,23 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.functions import bilinear_signs
+from repro.core.functions import bilinear_signs, seeded_projections
 from repro.utils.bits import pack_signs, hamming_packed
 
 
 def bilinear_hash_ref(x, u, v):
     """Packed codes: pack(sgn((X U) .* (X V))) -> (n, ceil(k/32)) uint32."""
     return pack_signs(bilinear_signs(x, u, v))
+
+
+def bilinear_hash_seeded_ref(x, seed, k: int):
+    """Seed-generated packed codes: materialize the factors the seed denotes
+    via the pure-jnp generator oracle, then hash exactly like the
+    materialized reference.  ops.bilinear_hash_seeded must match this bit
+    for bit — the kernel regenerates the same (row, col)-indexed values
+    tile-by-tile."""
+    u, v = seeded_projections(seed, x.shape[1], k)
+    return bilinear_hash_ref(x, u, v)
 
 
 def hamming_distance_ref(codes, query):

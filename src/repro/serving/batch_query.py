@@ -25,9 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.functions import BHHash, bilinear_signs
+from repro.core.functions import BHHash, SeededBHHash, bilinear_signs
 from repro.core.search import margin_rerank_batch
-from repro.utils.bits import pack_signs
+from repro.utils.bits import flip_packed, pack_signs
 
 PAD_MULTIPLE = 128  # candidate-matrix padding quantum (bounds jit retraces)
 
@@ -35,6 +35,23 @@ PAD_MULTIPLE = 128  # candidate-matrix padding quantum (bounds jit retraces)
 def _stackable(families) -> bool:
     return (all(isinstance(f, BHHash) for f in families)
             and len({f.u.shape for f in families}) == 1)
+
+
+def _seed_stackable(families) -> bool:
+    """True when the whole family list can hash through ONE grouped
+    seed-generated kernel launch: every table is a SeededBHHash over the
+    same (d, k).  LBH (learned factors) and the classic sampled BHHash keep
+    the materialized path — same interface, they just don't qualify."""
+    return (all(type(f) is SeededBHHash for f in families)
+            and len({f.u.shape for f in families}) == 1)
+
+
+def _seeded_grouped_codes(families, pts) -> jax.Array:
+    """(L, n, W) database-style codes via the grouped seeded kernel: zero
+    projection-weight HBM reads, one launch for all L tables."""
+    from repro.kernels import ops
+    seeds = jnp.asarray([f.seed for f in families], jnp.uint32)
+    return ops.bilinear_hash_seeded_grouped(pts, seeds, families[0].k)
 
 
 @jax.jit
@@ -51,9 +68,21 @@ def _bh_db_codes(u_stack, v_stack, x):
         u_stack, v_stack)
 
 
-def hash_queries_all(families, w) -> jax.Array:
-    """Query-side codes for all tables: (L, B, W) uint32."""
+def hash_queries_all(families, w, use_kernels: bool = False) -> jax.Array:
+    """Query-side codes for all tables: (L, B, W) uint32.
+
+    use_kernels=True routes all-SeededBHHash families through the grouped
+    seed-generated Pallas kernel (factors regenerated in-register — no
+    projection weights stream from HBM); the query-side sign flip
+    h(P_w) = -h(w) is the packed-bit complement of the database-style
+    codes (sgn flips every bit: prod >= 0 pairs exactly with prod < 0
+    under the sgn(0)=+1 convention), so the result is bit-identical to
+    the stacked jnp path.
+    """
     w = jnp.asarray(w, jnp.float32)
+    if use_kernels and _seed_stackable(families):
+        return flip_packed(_seeded_grouped_codes(families, w),
+                           families[0].k)
     if _stackable(families):
         u = jnp.stack([f.u for f in families])
         v = jnp.stack([f.v for f in families])
@@ -61,9 +90,16 @@ def hash_queries_all(families, w) -> jax.Array:
     return jnp.stack([f.hash_query(w) for f in families])
 
 
-def hash_database_all(families, x) -> jax.Array:
-    """Database-side codes for all tables: (L, n, W) uint32."""
+def hash_database_all(families, x, use_kernels: bool = False) -> jax.Array:
+    """Database-side codes for all tables: (L, n, W) uint32.
+
+    use_kernels=True: see hash_queries_all — all-SeededBHHash families hash
+    through one grouped seeded kernel launch, bit-identical to the stacked
+    jnp path.
+    """
     x = jnp.asarray(x, jnp.float32)
+    if use_kernels and _seed_stackable(families):
+        return _seeded_grouped_codes(families, x)
     if _stackable(families):
         u = jnp.stack([f.u for f in families])
         v = jnp.stack([f.v for f in families])

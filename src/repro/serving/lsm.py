@@ -188,7 +188,8 @@ class LSMMultiTableIndex(MultiTableIndex):
         x = jnp.asarray(x, jnp.float32)
         self.families = [self._make_family(self.table_key(t, learn_key), x)
                          for t in range(self.num_tables)]
-        codes_all = np.asarray(bq.hash_database_all(self.families, x))
+        codes_all = np.asarray(bq.hash_database_all(
+            self.families, x, use_kernels=self.config.use_kernels))
         x_np = np.asarray(x)
         n, d = x_np.shape
         ll, w = self.num_tables, codes_all.shape[2]
@@ -283,7 +284,8 @@ class LSMMultiTableIndex(MultiTableIndex):
         if k == 0:
             return np.empty((0,), dtype=np.int64)
         new_codes = np.asarray(
-            bq.hash_database_all(self.families, jnp.asarray(x_new)))
+            bq.hash_database_all(self.families, jnp.asarray(x_new),
+                                 use_kernels=self.config.use_kernels))
         with self._lock:
             r0 = self._rows
             self._grow_rows(r0 + k)
@@ -678,7 +680,7 @@ class LSMMultiTableIndex(MultiTableIndex):
 
     def _scan_segment(self, codes_dev, qcodes, l: int, seg_len: int,
                       cap: int, dead: int, active_dev, fused: bool,
-                      select, mesh, shard_axis):
+                      select, pack, mesh, shard_axis):
         """Scan one segment and return its top-l LIVE candidates,
         (G, B, l), lex-sorted, local row ids.  Single-device: exactly l
         deep with the liveness mask applied inside selection; sharded:
@@ -691,7 +693,7 @@ class LSMMultiTableIndex(MultiTableIndex):
             d, i = hamming_topk_grouped_sharded(
                 codes_dev, qcodes, depth, mesh,
                 axis=shard_axis, use_kernel=fused, n_valid=seg_len,
-                select=select)
+                select=select, pack=pack)
             if dead:
                 return drop_tombstones_topk(d, i, active_dev, l)
             return _to_l(d, i, l)
@@ -704,7 +706,7 @@ class LSMMultiTableIndex(MultiTableIndex):
             from repro.kernels import ops
             d, i = ops.hamming_topk_grouped(codes_dev, qcodes, l,
                                             select=select,
-                                            active=active_dev)
+                                            active=active_dev, pack=pack)
         else:
             d, i = hamming_topk_grouped(codes_dev, qcodes, l,
                                         select=select, active=active_dev)
@@ -759,20 +761,22 @@ class LSMMultiTableIndex(MultiTableIndex):
             bcap = (self._bcap if mesh is None
                     else _pow2_at_least(split, _MIN_CAP))
             dcap = _pow2_at_least(delta_len, self._delta_floor)
-        qcodes = bq.hash_queries_all(self.families, w)        # (L, B, W)
+        qcodes = bq.hash_queries_all(
+            self.families, w, use_kernels=cfg.use_kernels)    # (L, B, W)
         select = cfg.fused_select
+        pack = cfg.cand_pack
         d_m = i_m = None
         if base_codes is not None:
             d_b, i_b = self._scan_segment(
                 base_codes, qcodes, l, split, bcap, base_dead, base_active,
-                cfg.use_kernels, select, mesh, shard_axis)
+                cfg.use_kernels, select, pack, mesh, shard_axis)
             d_m, i_m = d_b, i_b
         if delta is not None:
             delta_codes, delta_x, delta_active = delta
             fused = cfg.use_kernels and delta_len >= cfg.lsm_delta_fused_rows
             d_d, i_d = self._scan_segment(
                 delta_codes, qcodes, l, delta_len, dcap, delta_dead,
-                delta_active, fused, select, None, shard_axis)
+                delta_active, fused, select, pack, None, shard_axis)
             # delta-local ids -> global rows (sentinels stay -1)
             i_d = jnp.where(i_d < 0, jnp.int32(-1),
                             i_d + jnp.int32(split))

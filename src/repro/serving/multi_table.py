@@ -104,7 +104,8 @@ class MultiTableIndex:
             return F.EHHash.create(key, d, cfg.bits,
                                    sample_dims=cfg.eh_sample_dims)
         if cfg.method == "bh":
-            return F.BHHash.create(key, d, cfg.bits)
+            fam = F.SeededBHHash if cfg.seeded_projections else F.BHHash
+            return fam.create(key, d, cfg.bits)
         if cfg.method == "lbh":
             m = min(cfg.lbh_sample, x.shape[0])
             sel = jax.random.choice(jax.random.fold_in(key, 1), x.shape[0],
@@ -119,7 +120,8 @@ class MultiTableIndex:
         x = jnp.asarray(x, jnp.float32)
         self.families = [self._make_family(self.table_key(t, learn_key), x)
                          for t in range(self.num_tables)]
-        codes_all = np.asarray(bq.hash_database_all(self.families, x))
+        codes_all = np.asarray(bq.hash_database_all(
+            self.families, x, use_kernels=self.config.use_kernels))
         self.codes = [codes_all[t] for t in range(self.num_tables)]
         self.tables = [SingleHashTable(c, self.config.bits)
                        for c in self.codes]
@@ -213,7 +215,8 @@ class MultiTableIndex:
         if x_new.shape[0] == 0:
             return np.empty((0,), dtype=np.int64)
         new_codes = np.asarray(
-            bq.hash_database_all(self.families, jnp.asarray(x_new)))
+            bq.hash_database_all(self.families, jnp.asarray(x_new),
+                                 use_kernels=self.config.use_kernels))
         start = self.x_np.shape[0]
         rows = np.arange(start, start + x_new.shape[0], dtype=np.int64)
         ids = np.arange(self._next_id, self._next_id + x_new.shape[0],
@@ -430,17 +433,19 @@ class MultiTableIndex:
                 margins_topk=m_pad if topk > 1 else None)
         codes_dev, live_rows_dev = self._scan_state(mesh, shard_axis)
         n_live = self._live_rows.shape[0]
-        qcodes = bq.hash_queries_all(self.families, w)        # (L, B, W)
+        qcodes = bq.hash_queries_all(
+            self.families, w, use_kernels=self.config.use_kernels)  # (L,B,W)
         select = self.config.fused_select       # None -> REPRO_FUSED_SELECT
+        pack = self.config.cand_pack            # None -> REPRO_CAND_PACK
         if mesh is not None:
             _, idx = hamming_topk_grouped_sharded(
                 codes_dev, qcodes, l, mesh, axis=shard_axis,
                 use_kernel=self.config.use_kernels, n_valid=n_live,
-                select=select)
+                select=select, pack=pack)
         elif self.config.use_kernels:
             from repro.kernels import ops
             _, idx = ops.hamming_topk_grouped(codes_dev, qcodes, l,
-                                              select=select)
+                                              select=select, pack=pack)
         else:
             _, idx = hamming_topk_grouped(codes_dev, qcodes, l,
                                           select=select)

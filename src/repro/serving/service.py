@@ -160,7 +160,9 @@ class HashQueryService:
         t_start = time.perf_counter()
         b = ws.shape[0]
         use_cache = mask is None and self.cache_size > 0
-        qcodes = np.asarray(bq.hash_queries_all(self.index.families, ws))
+        qcodes = np.asarray(bq.hash_queries_all(
+            self.index.families, ws,
+            use_kernels=self.index.config.use_kernels))
         keys = [qcodes[:, i, :].tobytes() for i in range(b)]
 
         # one consistent row space for cache probe + lookup + re-rank + id

@@ -135,22 +135,30 @@ def test_hamming_topk_grouped_vs_per_group(rng, g, n, b, w, l):
 
 
 def _all_selection_paths(codes, qs, l, block_n=4096):
-    """(dists, ids) from every selection implementation, keyed by name.
-    All run in interpret mode (no TPU needed), so this parity matrix is
-    exercised on the REPRO_USE_KERNELS=0 CI leg too."""
+    """(dists, ids) from every selection implementation x candidate pack,
+    keyed by name.  All run in interpret mode (no TPU needed), so this
+    parity matrix is exercised on the REPRO_USE_KERNELS=0 CI leg too.
+    Narrow candidate packs ("16", and "8" wherever 32·W fits) must be
+    bit-identical to the int32 emission after the widening merge — the
+    sentinel re-encoding is exactly what these adversarial-tie suites
+    stress."""
     from repro.core import search
     codes, qs = jnp.asarray(codes), jnp.asarray(qs)
-    return {
-        "kernel_argmin": ops.hamming_topk_grouped(
-            codes, qs, l, block_n=block_n, select="argmin"),
-        "kernel_hist": ops.hamming_topk_grouped(
-            codes, qs, l, block_n=block_n, select="hist"),
-        "kernel_hist_dma": ops.hamming_topk_grouped(
-            codes, qs, l, block_n=block_n, select="hist", dma=True),
-        "jnp_lax": search.hamming_topk_grouped(codes, qs, l,
-                                               select="argmin"),
-        "jnp_hist": search.hamming_topk_grouped_hist(codes, qs, l),
-    }
+    paths = {}
+    packs = ["none", "16"] + (["8"] if 32 * codes.shape[2] < 255 else [])
+    for pack in packs:
+        sfx = f"_p{pack}"
+        paths[f"kernel_argmin{sfx}"] = ops.hamming_topk_grouped(
+            codes, qs, l, block_n=block_n, select="argmin", pack=pack)
+        paths[f"kernel_hist{sfx}"] = ops.hamming_topk_grouped(
+            codes, qs, l, block_n=block_n, select="hist", pack=pack)
+        paths[f"kernel_hist_dma{sfx}"] = ops.hamming_topk_grouped(
+            codes, qs, l, block_n=block_n, select="hist", dma=True,
+            pack=pack)
+    paths["jnp_lax"] = search.hamming_topk_grouped(codes, qs, l,
+                                                   select="argmin")
+    paths["jnp_hist"] = search.hamming_topk_grouped_hist(codes, qs, l)
+    return paths
 
 
 def _assert_paths_identical(paths):
@@ -236,18 +244,21 @@ def test_selection_parity_active_mask(rng):
 
     def paths(mask):
         aj = jnp.asarray(mask)
-        return {
-            "kernel_argmin": ops.hamming_topk_grouped(
-                cj, qj, l, block_n=256, select="argmin", active=aj),
-            "kernel_hist": ops.hamming_topk_grouped(
-                cj, qj, l, block_n=256, select="hist", active=aj),
-            "kernel_hist_dma": ops.hamming_topk_grouped(
-                cj, qj, l, block_n=256, select="hist", dma=True, active=aj),
-            "jnp_lax": search.hamming_topk_grouped(cj, qj, l,
-                                                   select="argmin",
-                                                   active=aj),
-            "jnp_hist": search.hamming_topk_grouped_hist(cj, qj, l, aj),
-        }
+        out = {}
+        for pack in ("none", "16", "8"):    # w=2 -> 32·W=64 < 255: all legal
+            out[f"kernel_argmin_p{pack}"] = ops.hamming_topk_grouped(
+                cj, qj, l, block_n=256, select="argmin", active=aj,
+                pack=pack)
+            out[f"kernel_hist_p{pack}"] = ops.hamming_topk_grouped(
+                cj, qj, l, block_n=256, select="hist", active=aj, pack=pack)
+            out[f"kernel_hist_dma_p{pack}"] = ops.hamming_topk_grouped(
+                cj, qj, l, block_n=256, select="hist", dma=True, active=aj,
+                pack=pack)
+        out["jnp_lax"] = search.hamming_topk_grouped(cj, qj, l,
+                                                     select="argmin",
+                                                     active=aj)
+        out["jnp_hist"] = search.hamming_topk_grouped_hist(cj, qj, l, aj)
+        return out
 
     def dense_oracle(mask):
         live = np.flatnonzero(mask)
@@ -295,6 +306,67 @@ def test_select_env_and_validation(monkeypatch):
         env_fused_select("bogus")               # explicit bogus -> loud
 
 
+def test_cand_pack_env_and_validation(monkeypatch):
+    from repro.core.search import env_cand_pack
+    monkeypatch.delenv("REPRO_CAND_PACK", raising=False)
+    assert env_cand_pack(None) == "16"
+    monkeypatch.setenv("REPRO_CAND_PACK", "8")
+    assert env_cand_pack(None) == "8"
+    assert env_cand_pack("none") == "none"      # explicit beats env
+    monkeypatch.setenv("REPRO_CAND_PACK", "bogus")
+    assert env_cand_pack(None) == "16"          # unknown env -> default
+    with pytest.raises(ValueError):
+        env_cand_pack("bogus")                  # explicit bogus -> loud
+
+
+def test_cand_encoding_guards():
+    """The overflow guard: a narrow pack whose sentinel a real distance
+    could reach must refuse loudly (a silent collision would make genuine
+    max-distance rows sort as if masked)."""
+    from repro.kernels.hamming import CAND_SENTINELS, cand_encoding
+    # int16: 32·W up to 0x7FFE is fine; DIST_SENTINEL stays the "none" one
+    dt, it, sent = cand_encoding("16", 4, 4096)
+    assert (dt, it, sent) == (jnp.int16, jnp.int16, 0x7FFF)
+    assert cand_encoding("none", 10**6, 1 << 20)[2] == CAND_SENTINELS["none"]
+    # uint8: k <= 224 (w <= 7 -> 32·W = 224 < 255) is the legal ceiling
+    assert cand_encoding("8", 7, 4096)[0] == jnp.uint8
+    with pytest.raises(ValueError):
+        cand_encoding("8", 8, 4096)             # 32·8 = 256 > 255
+    with pytest.raises(ValueError):
+        cand_encoding("16", 1024, 4096)         # 32·1024 = 32768 > 0x7FFF
+    with pytest.raises(ValueError):
+        cand_encoding("16", 4, 1 << 16)         # block-local id overflow
+    with pytest.raises(ValueError):
+        cand_encoding("bogus", 4, 4096)
+
+
+def test_cand_pack_sentinel_ordering_k224(rng):
+    """The per-dtype sentinel contract at the uint8 ceiling (k=224, W=7:
+    real distances reach 224, the uint8 sentinel is 255): saturated
+    distances must stay real candidates and l > n sentinel slots must
+    still sort strictly after every real distance on every pack."""
+    from repro.core import search
+    from repro.kernels.hamming import DIST_SENTINEL
+    from repro.utils.bits import flip_packed, pack_signs
+    k, n, l = 224, 10, 32
+    signs = jnp.asarray(np.ones((1, k), np.int8))
+    row = np.asarray(pack_signs(signs))                   # (1, 7)
+    codes = np.broadcast_to(row, (1, n, 7)).copy()
+    q_sat = np.asarray(flip_packed(jnp.asarray(row), k))  # distance 224
+    qs = np.stack([q_sat])                                # (1, 1, 7)
+    ref = search.hamming_topk_grouped(jnp.asarray(codes), jnp.asarray(qs),
+                                      l, select="argmin")
+    for pack in ("none", "16", "8"):
+        d, i = ops.hamming_topk_grouped(jnp.asarray(codes),
+                                        jnp.asarray(qs), l, pack=pack)
+        assert np.array_equal(np.asarray(d), np.asarray(ref[0])), pack
+        assert np.array_equal(np.asarray(i), np.asarray(ref[1])), pack
+    # the max distance k=224 occupies every real slot, sentinels after it
+    d = np.asarray(ref[0])
+    assert (d[..., :n] == k).all()
+    assert (d[..., n:] == DIST_SENTINEL).all()
+
+
 def test_scan_select_model():
     """The selection-cost model must show the histogram select strictly
     cheaper everywhere the serving paths operate (l >= 8), with the
@@ -334,6 +406,49 @@ def test_scan_traffic_model():
     # B=1 fused never moves more bytes than unfused
     assert (ops.scan_traffic_model(n, w, 1, l, fused=True)
             <= ops.scan_traffic_model(n, w, 1, l, fused=False))
+
+
+def test_scan_cand_model_packs_and_grouped():
+    """Candidate-traffic model: int16 pairs halve the bytes exactly, uint8
+    distances shave another quarter, and a grouped launch over G tables
+    scales the term linearly (one candidate stream per table)."""
+    n, b, l = 1_000_000, 32, 128
+    base = ops.scan_cand_model(n, b, l, pack="none")
+    assert base == ops.scan_cand_model(n, b, l)  * 2   # default pack="16"
+    assert ops.scan_cand_model(n, b, l, pack="16") * 2 == base
+    assert ops.scan_cand_model(n, b, l, pack="8") * 8 == base * 3
+    g = 6
+    assert (ops.scan_cand_model(n, b, l, g=g, pack="16")
+            == g * ops.scan_cand_model(n, b, l, pack="16"))
+    # packing flows through the full fused traffic model: only the
+    # candidate term shrinks, so fused bytes strictly drop but stay above
+    # the irreducible code stream
+    w = 4
+    fused_none = ops.scan_traffic_model(n, w, b, l, fused=True, pack="none")
+    fused_16 = ops.scan_traffic_model(n, w, b, l, fused=True, pack="16")
+    code_stream = n * w * 4
+    assert code_stream < fused_16 < fused_none
+    assert fused_none - fused_16 == base / 2
+
+
+def test_hash_traffic_model_seeded():
+    """Seed-generated projections delete the U/V weight stream from every
+    table's hash pass.  At the query-hash point (n = B = 32, d=64, k=128)
+    the weights ARE the traffic — the ratio must clear the regression-gate
+    floor with room to spare; for a bulk database pass the input stream
+    dominates and the saving is the fixed 2·d·k·4 bytes per table."""
+    b, d, k, g = 32, 64, 128, 4
+    mat = ops.hash_traffic_model(b, d, k)
+    seeded = ops.hash_traffic_model(b, d, k, seeded=True)
+    assert mat - seeded == 2 * d * k * 4          # exactly the weight bytes
+    assert mat / seeded >= 2.0
+    assert (ops.hash_traffic_model(b, d, k, g=g, seeded=True)
+            == g * seeded)
+    # the grouped materialized pass re-reads its weights per table, so the
+    # per-table advantage is preserved at every g
+    assert (ops.hash_traffic_model(b, d, k, g=g)
+            / ops.hash_traffic_model(b, d, k, g=g, seeded=True)
+            >= mat / seeded)
 
 
 def test_hamming_topk_order(rng):
