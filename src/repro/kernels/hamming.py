@@ -73,6 +73,12 @@ DIST_SENTINEL = 0x3FFFFFFF
 CAND_SENTINELS = {"none": DIST_SENTINEL, "16": 0x7FFF, "8": 0xFF}
 _CAND_ID_MAX = 0x7FFF                  # ids are int16 in both narrow packs
 
+# Per-core VMEM budget every launch must fit: double-buffered block inputs/
+# outputs plus scratch.  Mirrored by repro.lint.kernel_contracts, which
+# abstractly evaluates each registered entrypoint's launch geometry against
+# it — keep the two in sync.
+VMEM_BUDGET_BYTES = 16 * 2**20
+
 
 def cand_encoding(pack: str, w: int, block_n: int):
     """Resolve a candidate pack name to (dist_dtype, id_dtype, sentinel).

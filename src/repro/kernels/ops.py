@@ -62,6 +62,10 @@ def bilinear_hash(x, u, v, *, block_n: int = 256, block_k: int = 128,
     n, d = x.shape
     k = u.shape[1]
     w = n_words(k)
+    # single k-block: the out BlockSpec's lane dim is block_k//32, which
+    # only tiles the packed axis legally when it spans ALL of it (a smaller
+    # k-block would write 4-lane slivers against the 128-lane tile grid)
+    block_k = k + ((-k) % block_k)
     x = _pad_to(_pad_to(x.astype(jnp.float32), 0, block_n), 1, block_d)
     u = _pad_to(_pad_to(u.astype(jnp.float32), 0, block_d), 1, block_k)
     v = _pad_to(_pad_to(v.astype(jnp.float32), 0, block_d), 1, block_k)
@@ -104,10 +108,11 @@ def bilinear_hash_seeded_grouped(x, seeds, k: int, *, block_n: int = 256,
     n, d = x.shape
     w = n_words(k)
     x = _pad_to(_pad_to(x.astype(jnp.float32), 0, block_n), 1, block_d)
+    # single k-block, same lane-tiling rule as bilinear_hash above
     k_pad = k + ((-k) % block_k)
     codes = bilinear_hash_seeded_kernel(
         x, seeds.reshape(-1, 1).astype(jnp.uint32), k=k_pad,
-        block_n=block_n, block_k=block_k, block_d=block_d,
+        block_n=block_n, block_k=k_pad, block_d=block_d,
         interpret=_interpret_default(interpret))
     codes = codes[:, :n, :w]
     rem = k - (w - 1) * WORD

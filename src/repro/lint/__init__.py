@@ -1,0 +1,14 @@
+"""repro.lint — machine-checked invariants for the serving stack.
+
+Four passes (see ISSUE/PR 8): jit-cache stability, Pallas kernel
+contracts, lock discipline, and the runtime retrace/lock sentinels.
+``python -m repro.lint`` runs the static passes against the committed
+``lint_baseline.json``; ``repro.lint.runtime`` provides the
+TraceCounter pytest fixture and opt-in runtime lock assertions.
+"""
+from repro.lint.findings import Baseline, Finding, Report
+from repro.lint.runtime import (TraceCounter, runtime_lock_checks,
+                                scan_trace_targets)
+
+__all__ = ["Baseline", "Finding", "Report", "TraceCounter",
+           "runtime_lock_checks", "scan_trace_targets"]

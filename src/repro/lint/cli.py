@@ -1,0 +1,140 @@
+"""CLI driver: ``python -m repro.lint``.
+
+Runs the static passes (jit stability, kernel contracts, lock
+discipline, dead-module reachability) over the repo, prints a human
+summary, optionally writes the machine-readable JSON report, and gates
+on findings not accepted by the committed baseline::
+
+    python -m repro.lint                          # summarize vs baseline
+    python -m repro.lint --fail-on-new            # CI gate (exit 1 on new)
+    python -m repro.lint --json report.json       # machine-readable report
+    python -m repro.lint --write-baseline         # accept current findings
+
+Exit codes: 0 clean (or informational run), 1 new findings with
+``--fail-on-new``, 2 internal error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.lint import import_graph, jit_stability, kernel_contracts, \
+    lock_discipline
+from repro.lint.findings import Baseline, Report
+from repro.lint.sources import discover
+
+DEFAULT_BASELINE = "lint_baseline.json"
+
+
+def run_all(root: Path, skip_kernel_contracts: bool = False) -> Report:
+    root = Path(root)
+    modules = discover(root)
+    findings, meta = [], {"root": str(root)}
+
+    f, m = jit_stability.run(modules)
+    findings.extend(f)
+    meta["jit_stability"] = m
+
+    if not skip_kernel_contracts:
+        f, m = kernel_contracts.run(modules)
+        findings.extend(f)
+        meta["kernel_contracts"] = m
+
+    f, m = lock_discipline.run(modules)
+    findings.extend(f)
+    meta["lock_discipline"] = m
+
+    f, m = import_graph.run(modules, root)
+    findings.extend(f)
+    meta["import_graph"] = m
+
+    findings.sort(key=lambda f: (f.pass_name, f.rule, f.path, f.line))
+    return Report(findings=findings, meta=meta)
+
+
+def _find_root(start: Path) -> Path:
+    p = Path(start).resolve()
+    for cand in (p, *p.parents):
+        if (cand / "src" / "repro").is_dir():
+            return cand
+    return p
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="repro invariant checker: jit-cache stability, Pallas "
+                    "kernel contracts, lock discipline, dead modules")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: auto-detect src/repro upward)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline file (default: <root>/{DEFAULT_BASELINE})")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the machine-readable JSON report here")
+    ap.add_argument("--fail-on-new", action="store_true",
+                    help="exit 1 if any error finding is not in the baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept all current error findings into the "
+                         "baseline file (reasons to be edited by hand)")
+    ap.add_argument("--no-kernel-contracts", action="store_true",
+                    help="skip the (jax-importing) kernel contract sweep")
+    args = ap.parse_args(argv)
+
+    root = Path(args.root) if args.root else _find_root(Path.cwd())
+    baseline_path = Path(args.baseline) if args.baseline \
+        else root / DEFAULT_BASELINE
+
+    try:
+        report = run_all(root, skip_kernel_contracts=args.no_kernel_contracts)
+    except Exception as e:          # noqa: BLE001 - CLI boundary
+        print(f"repro.lint: internal error: {type(e).__name__}: {e}",
+              file=sys.stderr)
+        raise
+
+    baseline = Baseline.load(baseline_path)
+    new = report.new_vs(baseline)
+    stale = baseline.stale(report)
+
+    if args.json:
+        payload = report.to_json()
+        payload["baseline"] = str(baseline_path)
+        payload["new_fingerprints"] = [f.fingerprint for f in new]
+        Path(args.json).write_text(json.dumps(payload, indent=2) + "\n")
+
+    if args.write_baseline:
+        reasons = {e["fingerprint"]: e["reason"] for e in baseline.entries}
+        Baseline.from_report(report, reasons).save(baseline_path, report)
+        print(f"wrote {baseline_path} ({len(report.errors())} accepted "
+              f"finding(s), {len(report.reports())} report-only)")
+        return 0
+
+    # ---- human summary ----
+    err, rep = report.errors(), report.reports()
+    print(f"repro.lint: {len(err)} finding(s) "
+          f"({len(err) - len(new)} baselined, {len(new)} new), "
+          f"{len(rep)} report-only")
+    for f in new:
+        print(f"  NEW [{f.rule}] {f.location()}")
+        print(f"      {f.message}")
+    for f in err:
+        if f not in new:
+            print(f"  baselined [{f.rule}] {f.location()}")
+    if rep:
+        by_rule = {}
+        for f in rep:
+            by_rule.setdefault(f.rule, []).append(f)
+        for rule, fs in sorted(by_rule.items()):
+            print(f"  report [{rule}]: {len(fs)} — "
+                  + ", ".join(f.symbol or f.path for f in fs[:6])
+                  + (" …" if len(fs) > 6 else ""))
+    for e in stale:
+        print(f"  stale baseline entry [{e['rule']}] {e['location']} "
+              f"(no longer produced — prune it)")
+
+    if args.fail_on_new and new:
+        print(f"repro.lint: FAIL — {len(new)} new finding(s) not in "
+              f"{baseline_path}", file=sys.stderr)
+        return 1
+    return 0

@@ -1,0 +1,139 @@
+"""Finding model, fingerprints, baseline/suppression file, JSON report.
+
+A finding is one violated invariant at one site.  Its *fingerprint* is a
+stable hash over (pass, rule, file, symbol, key) — deliberately excluding
+line numbers, so a finding survives unrelated edits to the same file and
+the committed baseline does not churn.  ``key`` defaults to the message
+but passes may supply a shorter stable discriminator (e.g. the guarded
+attribute name) when the message carries volatile detail.
+
+The baseline file (``lint_baseline.json`` at the repo root) records the
+accepted findings: intentional exceptions, each with a ``reason``, plus
+the report-only inventory (dead modules) committed so growth is visible.
+``--fail-on-new`` fails only on *error*-severity findings whose
+fingerprint is absent from the baseline; report-severity findings are
+informational either way.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+
+SEVERITY_ERROR = "error"
+SEVERITY_REPORT = "report"
+
+
+@dataclasses.dataclass
+class Finding:
+    pass_name: str          # jit_stability | kernel_contract | lock_discipline | dead_module
+    rule: str               # kebab-case rule id, e.g. "env-read-in-jit"
+    path: str               # repo-relative posix path
+    symbol: str             # dotted qualname of the offending function/class ("" for module)
+    message: str            # human-readable description
+    line: int = 0           # 1-based line (informational; not fingerprinted)
+    severity: str = SEVERITY_ERROR
+    key: str = ""           # stable discriminator; defaults to message
+
+    @property
+    def fingerprint(self) -> str:
+        raw = "\0".join(
+            [self.pass_name, self.rule, self.path, self.symbol,
+             self.key or self.message])
+        return hashlib.sha256(raw.encode()).hexdigest()[:16]
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["fingerprint"] = self.fingerprint
+        return d
+
+    def location(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc} ({self.symbol})" if self.symbol else loc
+
+
+@dataclasses.dataclass
+class Report:
+    findings: list
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def errors(self):
+        return [f for f in self.findings if f.severity == SEVERITY_ERROR]
+
+    def reports(self):
+        return [f for f in self.findings if f.severity == SEVERITY_REPORT]
+
+    def new_vs(self, baseline: "Baseline"):
+        """Error-severity findings not accepted by the baseline."""
+        return [f for f in self.errors()
+                if f.fingerprint not in baseline.fingerprints]
+
+    def to_json(self) -> dict:
+        return {
+            "version": 1,
+            "meta": self.meta,
+            "counts": {
+                "error": len(self.errors()),
+                "report": len(self.reports()),
+            },
+            "findings": [f.to_dict() for f in self.findings],
+        }
+
+
+class Baseline:
+    """Committed accepted-findings file.
+
+    Schema::
+
+        {"version": 1,
+         "entries": [{"fingerprint": "...", "rule": "...",
+                      "location": "path symbol", "reason": "..."}, ...]}
+
+    Entries whose fingerprint no longer matches any current finding are
+    *stale* — surfaced by the CLI so the file can be pruned.
+    """
+
+    def __init__(self, entries: list[dict] | None = None):
+        self.entries = entries or []
+
+    @property
+    def fingerprints(self) -> set:
+        return {e["fingerprint"] for e in self.entries}
+
+    def stale(self, report: Report) -> list[dict]:
+        live = {f.fingerprint for f in report.findings}
+        return [e for e in self.entries if e["fingerprint"] not in live]
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        if not Path(path).exists():
+            return cls([])
+        data = json.loads(Path(path).read_text())
+        return cls(list(data.get("entries", [])))
+
+    @classmethod
+    def from_report(cls, report: Report,
+                    reasons: dict[str, str] | None = None) -> "Baseline":
+        """Accept every current error finding (used by ``--write-baseline``).
+        ``reasons`` maps fingerprint -> reason for curated entries; others
+        get a placeholder the reviewer is expected to edit."""
+        reasons = reasons or {}
+        entries = []
+        for f in sorted(report.errors(), key=lambda f: (f.path, f.rule)):
+            entries.append({
+                "fingerprint": f.fingerprint,
+                "rule": f.rule,
+                "location": f.location(),
+                "reason": reasons.get(f.fingerprint, "accepted at baseline"),
+            })
+        return cls(entries)
+
+    def save(self, path: Path, report: Report | None = None) -> None:
+        data = {"version": 1, "entries": self.entries}
+        if report is not None:
+            # committed inventory of report-only findings (dead modules):
+            # not gating, but diffs show growth/shrinkage over PRs.
+            data["report_only"] = sorted(
+                f.location() for f in report.reports())
+        Path(path).write_text(json.dumps(data, indent=2) + "\n")

@@ -1,0 +1,85 @@
+"""Pass — dead-module import-graph reachability (report-only).
+
+Builds the ``repro.*`` import graph (module-level and function-local
+imports) and flags modules unreachable from ``tests/`` + ``benchmarks/``
+roots.  Importing ``repro.a.b`` also imports the ``repro`` and
+``repro.a`` package __init__ modules, whose own imports count as edges.
+
+Report-only: dead modules are not errors (seed-era scaffolding may be
+kept deliberately), but the inventory is committed with the baseline so
+growth/shrinkage stays visible in review.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.lint.findings import Finding, SEVERITY_REPORT
+
+
+def _imports_of(tree, known: set) -> set:
+    """repro.* modules imported anywhere in the tree (best effort)."""
+    out = set()
+
+    def add(mod):
+        if mod in known:
+            out.add(mod)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                add(a.name)
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            add(node.module)
+            for a in node.names:
+                # `from repro.pkg import submodule` names a module, not an
+                # attribute, when that module exists
+                add(f"{node.module}.{a.name}")
+    return out
+
+
+def _with_packages(mod: str) -> list:
+    parts = mod.split(".")
+    return [".".join(parts[:i]) for i in range(1, len(parts) + 1)]
+
+
+def run(modules, root: Path) -> tuple[list, dict]:
+    known = {m.module for m in modules}
+    edges = {m.module: _imports_of(m.tree, known) for m in modules}
+
+    roots = set()
+    for sub in ("tests", "benchmarks"):
+        base = Path(root) / sub
+        if not base.exists():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            try:
+                tree = ast.parse(path.read_text())
+            except SyntaxError:
+                continue
+            roots |= _imports_of(tree, known)
+
+    reached = set()
+    queue = [p for mod in roots for p in _with_packages(mod) if p in known]
+    while queue:
+        mod = queue.pop()
+        if mod in reached:
+            continue
+        reached.add(mod)
+        for dep in edges.get(mod, ()):
+            for p in _with_packages(dep):
+                if p in known and p not in reached:
+                    queue.append(p)
+
+    findings = []
+    for m in sorted(modules, key=lambda m: m.module):
+        if m.module not in reached:
+            findings.append(Finding(
+                "dead_module", "dead-module", m.rel, m.module,
+                severity=SEVERITY_REPORT, key=m.module,
+                message=f"{m.module} is unreachable from tests/ and "
+                        f"benchmarks/ imports"))
+    meta = {"modules": len(known), "reached": len(reached),
+            "dead": len(findings)}
+    return findings, meta

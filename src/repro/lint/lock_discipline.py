@@ -1,0 +1,227 @@
+"""Pass 3 — lock discipline.
+
+Classes declare their concurrency contract as a class-level literal::
+
+    class LSMMultiTableIndex:
+        _GUARDED_BY = {"_rows": "_lock", "_c": "_lock", ...}
+
+and this pass statically verifies every ``self.<attr>`` read/write of a
+guarded attribute happens inside the corresponding ``with self.<lock>:``
+scope.  Conventions understood:
+
+- ``__init__`` is exempt (no concurrent access before construction ends).
+- A method whose body carries a ``lock held by caller`` marker (comment
+  or docstring) is analyzed as entered with the lock held — and every
+  *call* to such a method is itself checked to happen under the lock
+  (rule ``unlocked-call-to-guarded-method``).  In classes with more than
+  one lock the marker must name it, e.g. ``# _cond lock held by
+  caller``.
+- Nested ``def``s inside a method are analyzed with an empty held set
+  (they generally escape to threads/callbacks and run later), but they
+  may take locks themselves.
+- Lambdas/comprehensions run inline and inherit the enclosing held set.
+
+Deliberate off-lock accesses (e.g. a benign racy read of a
+monotonic value) are accepted via the baseline file, keeping the
+exception and its reason reviewable in one place.
+
+The opt-in *runtime* assertion mode (``repro.lint.runtime``) enforces
+the same ``_GUARDED_BY`` maps with lock-ownership checks on instance
+attribute access, for tests.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.lint.findings import Finding
+
+_MARKER_RE = re.compile(r"(?:(\w+)\s+)?lock held by caller")
+
+
+def _guarded_map(cls_node: ast.ClassDef):
+    """The _GUARDED_BY dict literal of a class, or None."""
+    for stmt in cls_node.body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 and \
+                isinstance(stmt.targets[0], ast.Name) and \
+                stmt.targets[0].id == "_GUARDED_BY" and \
+                isinstance(stmt.value, ast.Dict):
+            out = {}
+            for k, v in zip(stmt.value.keys, stmt.value.values):
+                if isinstance(k, ast.Constant) and isinstance(v, ast.Constant):
+                    out[str(k.value)] = str(v.value)
+            return out
+    return None
+
+
+def _caller_held_lock(src, method: ast.AST, locks: set) -> tuple:
+    """(lock or "", ambiguous) for the 'lock held by caller' marker."""
+    seg = src.segment(method)
+    m = _MARKER_RE.search(seg)
+    if not m:
+        return "", False
+    named = m.group(1)
+    if named:
+        return (named, False) if named in locks else ("", True)
+    if len(locks) == 1:
+        return next(iter(locks)), False
+    return "", True
+
+
+class _MethodChecker:
+    def __init__(self, src, cls_name, guarded, caller_held, findings):
+        self.src = src
+        self.cls = cls_name
+        self.guarded = guarded                  # attr -> lock
+        self.locks = set(guarded.values())
+        self.caller_held = caller_held          # method name -> lock
+        self.findings = findings
+
+    def check_method(self, method, entry_held: frozenset):
+        self.qual = f"{self.cls}.{method.name}"
+        self._visit_block(method.body, entry_held)
+
+    # -- statement walk ------------------------------------------------------
+
+    def _visit_block(self, stmts, held):
+        for stmt in stmts:
+            self._visit_stmt(stmt, held)
+
+    def _visit_stmt(self, stmt, held):
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            new = set(held)
+            for item in stmt.items:
+                self._check_expr(item.context_expr, held)
+                lock = self._lock_of(item.context_expr)
+                if lock:
+                    new.add(lock)
+            self._visit_block(stmt.body, frozenset(new))
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # escapes to a thread/callback: starts with no locks held
+            self._visit_block(stmt.body, frozenset())
+        elif isinstance(stmt, ast.ClassDef):
+            self._visit_block(stmt.body, frozenset())
+        elif isinstance(stmt, ast.If):
+            self._check_expr(stmt.test, held)
+            self._visit_block(stmt.body, held)
+            self._visit_block(stmt.orelse, held)
+        elif isinstance(stmt, ast.While):
+            self._check_expr(stmt.test, held)
+            self._visit_block(stmt.body, held)
+            self._visit_block(stmt.orelse, held)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._check_expr(stmt.target, held)
+            self._check_expr(stmt.iter, held)
+            self._visit_block(stmt.body, held)
+            self._visit_block(stmt.orelse, held)
+        elif isinstance(stmt, ast.Try):
+            self._visit_block(stmt.body, held)
+            for h in stmt.handlers:
+                self._visit_block(h.body, held)
+            self._visit_block(stmt.orelse, held)
+            self._visit_block(stmt.finalbody, held)
+        else:
+            self._check_expr(stmt, held)
+
+    def _lock_of(self, expr):
+        """self.<lock> (or self.<lock>.acquire-style) context managers."""
+        if isinstance(expr, ast.Attribute) and \
+                isinstance(expr.value, ast.Name) and \
+                expr.value.id == "self" and expr.attr in self.locks:
+            return expr.attr
+        return ""
+
+    # -- expression checks ---------------------------------------------------
+
+    def _check_expr(self, node, held):
+        if node is None:
+            return
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._visit_block(n.body, frozenset())
+                continue
+            if isinstance(n, ast.Attribute) and \
+                    isinstance(n.value, ast.Name) and n.value.id == "self":
+                lock = self.guarded.get(n.attr)
+                if lock and lock not in held:
+                    verb = "write" if isinstance(n.ctx, ast.Store) else "read"
+                    self.findings.append(Finding(
+                        "lock_discipline", "guarded-attr-unlocked",
+                        self.src.rel, self.qual, line=n.lineno,
+                        key=f"{n.attr}:{verb}",
+                        message=f"{verb} of self.{n.attr} (GUARDED_BY "
+                                f"{lock}) outside 'with self.{lock}:' in "
+                                f"{self.qual}"))
+            if isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute) \
+                    and isinstance(n.func.value, ast.Name) \
+                    and n.func.value.id == "self":
+                need = self.caller_held.get(n.func.attr)
+                if need and need not in held:
+                    self.findings.append(Finding(
+                        "lock_discipline", "unlocked-call-to-guarded-method",
+                        self.src.rel, self.qual, line=n.lineno,
+                        key=f"call:{n.func.attr}",
+                        message=f"call to self.{n.func.attr}() (marked "
+                                f"'{need} lock held by caller') outside "
+                                f"'with self.{need}:' in {self.qual}"))
+            stack.extend(ast.iter_child_nodes(n))
+
+
+def run(modules) -> tuple[list, dict]:
+    findings = []
+    classes = []
+    for src in modules:
+        for node in src.tree.body:
+            if not isinstance(node, ast.ClassDef):
+                continue
+            guarded = _guarded_map(node)
+            if guarded is None:
+                continue
+            classes.append(f"{src.module}.{node.name}")
+            _check_class(src, node, guarded, findings)
+    return findings, {"guarded_classes": sorted(classes)}
+
+
+def _check_class(src, cls_node, guarded, findings):
+    locks = set(guarded.values())
+    methods = [s for s in cls_node.body
+               if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+    # sanity: every declared lock must be assigned in __init__
+    init = next((m for m in methods if m.name == "__init__"), None)
+    assigned = set()
+    if init is not None:
+        for n in ast.walk(init):
+            if isinstance(n, ast.Attribute) and isinstance(n.ctx, ast.Store) \
+                    and isinstance(n.value, ast.Name) and n.value.id == "self":
+                assigned.add(n.attr)
+    for lock in sorted(locks - assigned):
+        findings.append(Finding(
+            "lock_discipline", "guarded-by-unknown-lock", src.rel,
+            cls_node.name, line=cls_node.lineno, key=f"lock:{lock}",
+            message=f"_GUARDED_BY names lock '{lock}' which is never "
+                    f"assigned in {cls_node.name}.__init__"))
+
+    caller_held = {}
+    for m in methods:
+        lock, ambiguous = _caller_held_lock(src, m, locks)
+        if ambiguous:
+            findings.append(Finding(
+                "lock_discipline", "lock-annotation-ambiguous", src.rel,
+                f"{cls_node.name}.{m.name}", line=m.lineno, key="marker",
+                message=f"'lock held by caller' marker on "
+                        f"{cls_node.name}.{m.name} does not name a "
+                        f"declared lock ({sorted(locks)})"))
+        elif lock:
+            caller_held[m.name] = lock
+
+    checker = _MethodChecker(src, cls_node.name, guarded, caller_held,
+                             findings)
+    for m in methods:
+        if m.name == "__init__":
+            continue
+        entry = frozenset({caller_held[m.name]}) if m.name in caller_held \
+            else frozenset()
+        checker.check_method(m, entry)

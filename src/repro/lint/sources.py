@@ -1,0 +1,48 @@
+"""Source discovery and parse cache shared by the AST passes."""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+
+
+@dataclasses.dataclass
+class SourceModule:
+    path: Path              # absolute
+    rel: str                # repo-relative posix path
+    module: str             # dotted module name ("repro.kernels.ops")
+    text: str
+    tree: ast.Module
+
+    def segment(self, node: ast.AST) -> str:
+        return ast.get_source_segment(self.text, node) or ""
+
+
+def load_module(path: Path, root: Path, pkg_root: Path) -> SourceModule:
+    path = Path(path)
+    text = path.read_text()
+    rel = path.relative_to(root).as_posix()
+    try:
+        mod_rel = path.relative_to(pkg_root)
+        parts = list(mod_rel.with_suffix("").parts)
+        if parts and parts[-1] == "__init__":
+            parts = parts[:-1]
+        module = ".".join(parts)
+    except ValueError:
+        module = path.stem
+    return SourceModule(path=path, rel=rel, module=module, text=text,
+                        tree=ast.parse(text, filename=str(path)))
+
+
+def discover(root: Path, subdirs=("src",)) -> list[SourceModule]:
+    """All python modules under root/<subdir> (default: the src tree)."""
+    root = Path(root)
+    pkg_root = root / "src"
+    out = []
+    for sub in subdirs:
+        base = root / sub
+        if not base.exists():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            out.append(load_module(path, root, pkg_root))
+    return out

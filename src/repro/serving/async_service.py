@@ -162,6 +162,18 @@ class AsyncHashQueryService:
         batch-mates.
     """
 
+    # Lock discipline, machine-checked by repro.lint (static pass) and
+    # assertable at runtime via repro.lint.runtime_lock_checks.  The
+    # condition's lock owns the flush-policy queue, lifecycle flag, and
+    # every counter; the inner HashQueryService is not thread-safe, so the
+    # attribute itself is only touched under _service_lock.
+    _GUARDED_BY = {
+        "_batcher": "_cond", "_closed": "_cond",
+        "submitted": "_cond", "completed": "_cond", "shed": "_cond",
+        "flushes": "_cond", "batch_sizes": "_cond", "latencies_s": "_cond",
+        "service": "_service_lock",
+    }
+
     def __init__(self, index: MultiTableIndex, *, max_batch: int | None = None,
                  deadline_ms: float = 5.0, max_queue: int = 1024,
                  mode: str = "probe", cache_size: int = 1024,
@@ -417,6 +429,11 @@ class AsyncHashQueryService:
 
     def stats(self) -> dict:
         """Async-layer counters plus the inner service's (QPS, cache, …)."""
+        # inner-service counters mutate under _service_lock (it is not
+        # thread-safe); read them there, OUTSIDE _cond, so the two locks
+        # never nest and a slow backend stats() can't stall submitters
+        with self._service_lock:
+            backend = self.service.stats()
         with self._cond:
             lat = (np.asarray(self.latencies_s) if self.latencies_s
                    else np.zeros(1))
@@ -437,5 +454,5 @@ class AsyncHashQueryService:
                 "deadline_ms": 1e3 * self.deadline_s,
                 "max_batch": self.max_batch,
                 "max_queue": self._batcher.max_queue,
-                "backend": self.service.stats(),
+                "backend": backend,
             }

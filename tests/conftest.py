@@ -13,3 +13,12 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def trace_counter():
+    """TraceCounter over the serving-path jit entrypoints (repro.lint.runtime):
+    wrap steady-state traffic in ``with trace_counter.assert_no_retrace():``
+    to assert the window added zero new jit traces."""
+    from repro.lint.runtime import TraceCounter, scan_trace_targets
+    return TraceCounter(scan_trace_targets())
