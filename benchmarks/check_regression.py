@@ -41,6 +41,16 @@ sweep row the fused scan must keep >= 0.9x the unfused QPS measured on
 that same table (streaming a table VMEM can't pin must not surrender the
 fused win; committed ~2x).
 
+PR-9 adds the ``serving_refresh`` gates over the online re-learn path
+(all data-seeded and trace-counted, none timed): post-refresh recall on
+the gated random-hyperplane series must be at or above the pre-drift
+recall — the generation swap must REPAIR the drift the stale projections
+accumulated, not merely survive it; the swap pause (the only instant a
+concurrent query can observe, measured under the index lock) is capped at
+a generous 1000ms (observed ~1.5ms); and the steady-state window — warm
+traffic + a full second refresh — must report exactly ZERO new jit
+traces on the serving entrypoints.
+
 The gate also refuses a record with no ``serving_async`` sweep rows (or
 inconsistent shed/completion accounting) and one with no ``kernel_sweep``
 rows — the selection-sweep telemetry must keep flowing into the
@@ -74,6 +84,7 @@ MIXED_PAUSE_CAP_MS = 3000.0  # PR-6: no query may stall behind a compaction
 CAND_PACK_FLOOR = 2.0        # PR-7: int16 packing halves candidate bytes
 HASH_SEEDED_FLOOR = 2.0      # PR-7: seeded projections vs weight stream
 BIG_TABLE_FLOOR = 0.9        # PR-7: >VMEM table fused-vs-unfused QPS
+REFRESH_PAUSE_CAP_MS = 1000.0  # PR-9: generation swap is pointer flips
 
 
 def _fail(failures: list[str], msg: str) -> None:
@@ -299,6 +310,37 @@ def check(fresh: dict, baseline: dict | None) -> list[str]:
         else:
             _ok(f"mixed max query pause {worst:.0f}ms <= "
                 f"{MIXED_PAUSE_CAP_MS:.0f}ms")
+
+    # -- online re-learn + zero-downtime generation swap --------------------
+    refresh = fresh.get("serving_refresh")
+    if not refresh:
+        _fail(failures, "no serving_refresh record in fresh run")
+    else:
+        pre = refresh["recall_pre_drift"]
+        post = refresh["recall_post_refresh"]
+        if post < pre:
+            _fail(failures, f"post-refresh recall {post:.3f} < pre-drift "
+                            f"recall {pre:.3f} (the re-learn made the "
+                            f"index worse than before the drift)")
+        else:
+            _ok(f"post-refresh recall {post:.3f} >= pre-drift {pre:.3f} "
+                f"(stale generation read "
+                f"{refresh['recall_post_drift']:.3f})")
+        pause = refresh["swap_pause_ms"]
+        if pause > REFRESH_PAUSE_CAP_MS:
+            _fail(failures, f"generation-swap pause {pause:.0f}ms > "
+                            f"{REFRESH_PAUSE_CAP_MS:.0f}ms cap (the swap "
+                            f"is doing real work under the index lock)")
+        else:
+            _ok(f"generation-swap pause {pause:.2f}ms <= "
+                f"{REFRESH_PAUSE_CAP_MS:.0f}ms")
+        if refresh["retraces"] != 0:
+            _fail(failures, f"steady-state refresh window retraced "
+                            f"{refresh['retraces']} serving entrypoint(s): "
+                            f"{refresh.get('retraced_entrypoints')} — the "
+                            f"shadow rebuild is compiling on the hot path")
+        else:
+            _ok("steady-state refresh window added zero jit traces")
 
     return failures
 

@@ -19,7 +19,7 @@ def smoke(json_path: str | None = None) -> None:
     a miniature serving sweep plus the fused-scan benchmark end to end."""
     from benchmarks import (fig2_collision, fig34_active_learning,  # noqa: F401
                             roofline_table, serving_async, serving_mixed,
-                            serving_scan, tables_efficiency)
+                            serving_refresh, serving_scan, tables_efficiency)
 
     _section("smoke — serving sweep (tiny)")
     t0 = time.perf_counter()
@@ -43,11 +43,16 @@ def smoke(json_path: str | None = None) -> None:
     serving_mixed.run(json_path=json_path, smoke=True)
     print(f"# mixed smoke ok in {time.perf_counter() - t0:.1f}s")
 
+    _section("smoke — online re-learn + zero-downtime generation swap")
+    t0 = time.perf_counter()
+    serving_refresh.run(json_path=json_path, smoke=True)
+    print(f"# refresh smoke ok in {time.perf_counter() - t0:.1f}s")
+
 
 def main(json_path: str | None = None) -> None:
     from benchmarks import (fig2_collision, fig34_active_learning,
                             roofline_table, serving_async, serving_mixed,
-                            serving_scan, tables_efficiency)
+                            serving_refresh, serving_scan, tables_efficiency)
 
     summary: list[tuple[str, float, str]] = []
 
@@ -100,6 +105,12 @@ def main(json_path: str | None = None) -> None:
     serving_mixed.run(json_path=json_path)
     summary.append(("serving_mixed_lsm", (time.perf_counter() - t0) * 1e6,
                     "qps/insert-rate/pause across live compactions"))
+
+    _section("Serving — online re-learn + zero-downtime generation swap")
+    t0 = time.perf_counter()
+    serving_refresh.run(json_path=json_path)
+    summary.append(("serving_refresh", (time.perf_counter() - t0) * 1e6,
+                    "recall drift/repair + swap pause + retrace count"))
 
     _section("Roofline table (from dry-run artifacts)")
     t0 = time.perf_counter()

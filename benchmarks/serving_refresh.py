@@ -1,0 +1,185 @@
+"""Online re-learning under distribution drift: recall before/after a
+zero-downtime generation swap.
+
+serving_mixed.py measures the LSM index keeping its ANSWERS stable under
+live writes.  This benchmark measures the opposite lever: when the data
+DRIFTS, the answers are supposed to change — the learned bilinear
+projections (LBH) were fit to the old distribution, so code quality over
+the churned corpus decays, and the fix is `RefreshManager`: re-learn off
+the query path, rebuild a shadow, swap generations under the lock.
+
+One deterministic (data-seeded, untimed-gates) scenario, merged into
+``BENCH_serving.json`` under ``"serving_refresh"``:
+
+1. Fit an LBH index over a base corpus and read the margin-top-20 recall
+   gauge (serving_mixed's ``_recall_at``) twice: on random hyperplanes
+   (**recall_pre_drift**, the gated series) and on hyperplanes aimed at
+   the soon-to-arrive drifted clusters (**recall_drift_pre**, telemetry).
+2. Churn: stream in rows from ten TIGHT clusters the projections never
+   saw through the service write path, and delete an equal number of base
+   rows — the live row count stays constant, so recall moves only with
+   code quality, not corpus size.  **recall_post_drift** /
+   **recall_drift_post** read the stale-projection decay.
+3. ``service.refresh(wait=True)``: re-learn on the live snapshot, shadow
+   rebuild, generation swap.  **recall_post_refresh** must recover to at
+   least the pre-drift level (the drifted clusters are easy to code once
+   the learner has seen them); record the refresh cost split (``learn_s``,
+   ``build_s``, ``swap_pause_ms`` — the only pause queries can observe).
+4. Trace-stability window: with every shape bucket warm, run queries +
+   inserts + a SECOND full refresh under ``TraceCounter`` over the serving
+   jit entrypoints.  **retraces** must be 0 — a steady-state refresh
+   compiles nothing (the shadow is pinned to the live pad bucket and
+   pre-warmed before the swap).
+
+check_regression.py gates: ``recall_post_refresh >= recall_pre_drift``
+(the swap must repair the drift, not just survive it), ``swap_pause_ms``
+under a generous cap, and ``retraces == 0``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.serving_mixed import _recall_at
+from repro.core.indexer import IndexConfig
+from repro.data.synthetic import _append_bias_and_normalize, tiny1m_like
+from repro.lint.runtime import TraceCounter, scan_trace_targets
+from repro.serving import HashQueryService, LSMMultiTableIndex
+from repro.utils.trajectory import merge_into_json
+
+
+def _drift_clusters(rng: np.random.Generator, per: int, d_raw: int,
+                    classes: int = 10) -> tuple[np.ndarray, np.ndarray]:
+    """Ten tight clusters (scale 0.1 vs the corpus's 0.25-0.4) at unit
+    directions the base corpus never contained, lifted and normalized
+    exactly like the corpus.  Returns (rows, raw cluster means)."""
+    means = rng.normal(size=(classes, d_raw)).astype(np.float32)
+    means /= np.linalg.norm(means, axis=1, keepdims=True)
+    xs = [means[c] + 0.1 * rng.normal(size=(per, d_raw)).astype(np.float32)
+          for c in range(classes)]
+    return _append_bias_and_normalize(np.concatenate(xs)), means
+
+
+def run(json_path: str | None = None, n: int = 2400, d: int = 48,
+        bits: int = 16, tables: int = 2, drift_rows: int = 1200,
+        eval_queries: int = 128, scan_l: int = 64,
+        smoke: bool = False) -> dict:
+    # smoke == full config: the scenario is already sized so the corpus
+    # stays inside ONE pow2 row bucket (4096) — that is what lets the
+    # steady-state refresh retrace count read zero — and the gates are
+    # data-seeded, so shrinking them would change the committed numbers
+    # without saving meaningful time.
+    del smoke
+    corpus = tiny1m_like(n_labeled=n, n_unlabeled=0, d=d, classes=10, seed=7)
+    dd = corpus.x.shape[1]
+    rng = np.random.default_rng(11)
+    xd, means = _drift_clusters(rng, drift_rows // 10, d)
+    # gated eval: random hyperplanes (steady traffic); telemetry eval:
+    # hyperplanes orthogonal to a drifted cluster mean, so their true
+    # top-20 margin sets live inside the drifted mass the stale codes
+    # never saw
+    ws_eval = rng.normal(size=(eval_queries, dd)).astype(np.float32)
+    lifted = _append_bias_and_normalize(means.copy())
+    ws_drift = rng.normal(size=(eval_queries, dd)).astype(np.float32)
+    for i in range(eval_queries):
+        m = lifted[i % lifted.shape[0]]
+        ws_drift[i] -= (ws_drift[i] @ m) * m
+        ws_drift[i] /= np.linalg.norm(ws_drift[i])
+    ws_small = rng.normal(size=(8, dd)).astype(np.float32)
+
+    cfg = IndexConfig(method="lbh", bits=bits, tables=tables, seed=5,
+                      lsm_auto=False, lbh_sample=256, lbh_steps=75,
+                      lbh_lr=0.03)
+    idx = LSMMultiTableIndex(cfg).fit(corpus.x)
+    svc = HashQueryService(idx, max_batch=8, mode="scan", scan_l=16)
+
+    def recall(ws: np.ndarray) -> float:
+        with idx._lock:
+            x_live = idx.x_np[idx.active].copy()
+        return _recall_at(idx, ws, x_live, scan_l=scan_l)
+
+    recall_pre_drift = recall(ws_eval)
+    recall_drift_pre = recall(ws_drift)
+
+    # churn phase: drifted rows in through the service write path, an
+    # equal slice of the base corpus out — constant live row count
+    burst = max(drift_rows // 8, 1)
+    for i in range(8):
+        svc.insert(xd[i * burst:(i + 1) * burst])
+    idx.delete(np.arange(n - drift_rows, n, dtype=np.int64))
+    recall_post_drift = recall(ws_eval)
+    recall_drift_post = recall(ws_drift)
+
+    # warm the generation-0 service path at the shapes the trace window
+    # will revisit, then refresh #1 — the one whose recall repair and cost
+    # split get recorded
+    drip = _append_bias_and_normalize(
+        means[0] + 0.1 * rng.normal(size=(30, d)).astype(np.float32))
+    svc.query_batch(ws_small)
+    svc.insert(drip)
+    svc.query_batch(ws_small)
+    assert svc.refresh(wait=True)
+    ref = svc.refresher.stats()
+    recall_post_refresh = recall(ws_eval)
+    recall_drift_refresh = recall(ws_drift)
+
+    # generation-1 warm pass (same shapes), then the steady-state window:
+    # a full second refresh must add ZERO jit traces on the serving path
+    def drip_rows():
+        return _append_bias_and_normalize(
+            means[0] + 0.1 * rng.normal(size=(30, d)).astype(np.float32))
+
+    svc.query_batch(ws_small)
+    svc.insert(drip_rows())
+    svc.query_batch(ws_small)
+    tc = TraceCounter(scan_trace_targets())
+    before = tc.snapshot()
+    svc.query_batch(ws_small)
+    svc.insert(drip_rows())
+    assert svc.refresh(wait=True)
+    svc.query_batch(ws_small)
+    svc.insert(drip_rows())
+    svc.query_batch(ws_small)
+    grew = tc.deltas(before)
+    retraces = int(sum(grew.values()))
+
+    record = {
+        "config": {"n": n, "d": d, "bits": bits, "tables": tables,
+                   "drift_rows": drift_rows, "scan_l": scan_l,
+                   "lbh_sample": cfg.lbh_sample, "lbh_steps": cfg.lbh_steps},
+        "recall_pre_drift": recall_pre_drift,
+        "recall_post_drift": recall_post_drift,
+        "recall_post_refresh": recall_post_refresh,
+        "recall_drift_queries": {
+            "pre_drift": recall_drift_pre,
+            "post_drift": recall_drift_post,
+            "post_refresh": recall_drift_refresh,
+        },
+        "learn_s": ref["last_learn_s"],
+        "build_s": ref["last_build_s"],
+        "swap_pause_ms": ref["last_swap_pause_ms"],
+        "catchup_rows": ref["last_catchup_rows"],
+        "refresh_s": ref["last_refresh_s"],
+        "generation": int(idx.generation),
+        "retraces": retraces,
+        "retraced_entrypoints": grew,
+        "rows_final": int(idx.stats()["rows"]),
+    }
+    print("series,pre_drift,post_drift,post_refresh")
+    print(f"recall_rand,{recall_pre_drift:.3f},{recall_post_drift:.3f},"
+          f"{recall_post_refresh:.3f}")
+    print(f"recall_drift,{recall_drift_pre:.3f},{recall_drift_post:.3f},"
+          f"{recall_drift_refresh:.3f}")
+    print(f"# learn_s={ref['last_learn_s']:.2f} "
+          f"build_s={ref['last_build_s']:.2f} "
+          f"swap_pause_ms={ref['last_swap_pause_ms']:.2f} "
+          f"retraces={retraces}")
+    if json_path:
+        merge_into_json(json_path, {"serving_refresh": record})
+        print(f"# merged serving_refresh into {json_path}")
+    return record
+
+
+if __name__ == "__main__":
+    import sys
+    paths = [a for a in sys.argv[1:] if not a.startswith("--")]
+    run(json_path=paths[0] if paths else None, smoke="--smoke" in sys.argv)

@@ -80,6 +80,20 @@ class IndexConfig:
     # or "none" (int32 escape hatch).  None honours REPRO_CAND_PACK
     # (default 16).  Bit-identical results for every width.
     cand_pack: str | None = None
+    # Online refresh (serving.refresh.RefreshManager over the LSM index):
+    # periodically re-learn the bilinear projections from the accumulated
+    # live rows and atomically swap the rebuilt codes/tables in under
+    # traffic.  refresh_method is the family the re-learn produces (the
+    # paper's point is "lbh" — learned, warm-started at BH; reuses
+    # lbh_sample/lbh_steps/lbh_lr).  refresh_ingest_rows arms the service's
+    # auto policy: a background refresh starts once that many rows were
+    # inserted since the last one (None = manual refresh() only).
+    # refresh_traffic_sample weights the learning sample toward rows with
+    # small margin to recently served query hyperplanes (the traffic-aware
+    # variant; False keeps the seeded uniform subsample).
+    refresh_method: str = "lbh"
+    refresh_ingest_rows: int | None = None
+    refresh_traffic_sample: bool = False
 
 
 @dataclasses.dataclass

@@ -95,7 +95,11 @@ class SingleHashTable:
     bucket without renumbering survivors.
     """
 
-    def __init__(self, packed: np.ndarray, k: int):
+    def __init__(self, packed: np.ndarray, k: int,
+                 ids: np.ndarray | None = None):
+        """ids: optional (n,) stable ids the bucket values carry instead of
+        the default 0..n-1 row numbering — a refresh shadow index rebuilds
+        its tables for rows whose ids were assigned long ago."""
         packed = np.asarray(packed)
         assert packed.ndim == 2
         if packed.shape[1] > 2:
@@ -105,7 +109,11 @@ class SingleHashTable:
                 f"(core.search / query_scan) for wider codes.")
         self.k = int(k)
         self.n = packed.shape[0]
-        self._next_id = self.n
+        if ids is not None:
+            ids = np.asarray(ids, dtype=np.int64)
+            assert ids.shape == (self.n,)
+        self._next_id = (self.n if ids is None
+                         else int(ids.max()) + 1 if self.n else 0)
         self.buckets: dict[int, np.ndarray] = {}
         # id -> bucket key reverse map, built lazily on first insert/delete
         # so fit-only callers keep the fully vectorized constructor
@@ -118,8 +126,9 @@ class SingleHashTable:
             starts = np.flatnonzero(
                 np.r_[True, sorted_keys[1:] != sorted_keys[:-1]])
             bounds = np.r_[starts, self.n]
+            vals = order if ids is None else ids[order]
             for s, e in zip(bounds[:-1], bounds[1:]):
-                self.buckets[int(sorted_keys[s])] = order[s:e].astype(np.int64)
+                self.buckets[int(sorted_keys[s])] = vals[s:e].astype(np.int64)
 
     @property
     def num_buckets(self) -> int:

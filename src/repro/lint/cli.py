@@ -1,12 +1,13 @@
 """CLI driver: ``python -m repro.lint``.
 
 Runs the static passes (jit stability, kernel contracts, lock
-discipline, dead-module reachability) over the repo, prints a human
-summary, optionally writes the machine-readable JSON report, and gates
-on findings not accepted by the committed baseline::
+discipline, dead-module reachability, docs consistency) over the repo,
+prints a human summary, optionally writes the machine-readable JSON
+report, and gates on findings not accepted by the committed baseline::
 
     python -m repro.lint                          # summarize vs baseline
     python -m repro.lint --fail-on-new            # CI gate (exit 1 on new)
+    python -m repro.lint --only docs --fail-on-new  # fast docs-only gate
     python -m repro.lint --json report.json       # machine-readable report
     python -m repro.lint --write-baseline         # accept current findings
 
@@ -20,35 +21,54 @@ import json
 import sys
 from pathlib import Path
 
-from repro.lint import import_graph, jit_stability, kernel_contracts, \
-    lock_discipline
 from repro.lint.findings import Baseline, Report
-from repro.lint.sources import discover
 
 DEFAULT_BASELINE = "lint_baseline.json"
 
+# --only names; docs is source-free (no module parse, no jax import), so a
+# docs-only run skips discover() entirely and finishes in well under a second
+PASSES = ("jit_stability", "kernel_contracts", "lock_discipline",
+          "import_graph", "docs")
 
-def run_all(root: Path, skip_kernel_contracts: bool = False) -> Report:
+
+def run_all(root: Path, skip_kernel_contracts: bool = False,
+            only: list[str] | None = None) -> Report:
     root = Path(root)
-    modules = discover(root)
+    wanted = set(only) if only else set(PASSES)
+    if skip_kernel_contracts:
+        wanted.discard("kernel_contracts")
     findings, meta = [], {"root": str(root)}
 
-    f, m = jit_stability.run(modules)
-    findings.extend(f)
-    meta["jit_stability"] = m
+    # pass modules import lazily: the docs pass is dependency-free (no
+    # numpy/jax), so `--only docs` must not drag the source passes in
+    source_passes = wanted - {"docs"}
+    if source_passes:
+        from repro.lint import import_graph, jit_stability, \
+            kernel_contracts, lock_discipline
+        from repro.lint.sources import discover
+        modules = discover(root)
+        if "jit_stability" in wanted:
+            f, m = jit_stability.run(modules)
+            findings.extend(f)
+            meta["jit_stability"] = m
+        if "kernel_contracts" in wanted:
+            f, m = kernel_contracts.run(modules)
+            findings.extend(f)
+            meta["kernel_contracts"] = m
+        if "lock_discipline" in wanted:
+            f, m = lock_discipline.run(modules)
+            findings.extend(f)
+            meta["lock_discipline"] = m
+        if "import_graph" in wanted:
+            f, m = import_graph.run(modules, root)
+            findings.extend(f)
+            meta["import_graph"] = m
 
-    if not skip_kernel_contracts:
-        f, m = kernel_contracts.run(modules)
+    if "docs" in wanted:
+        from repro.lint import docs
+        f, m = docs.run(root)
         findings.extend(f)
-        meta["kernel_contracts"] = m
-
-    f, m = lock_discipline.run(modules)
-    findings.extend(f)
-    meta["lock_discipline"] = m
-
-    f, m = import_graph.run(modules, root)
-    findings.extend(f)
-    meta["import_graph"] = m
+        meta["docs"] = m
 
     findings.sort(key=lambda f: (f.pass_name, f.rule, f.path, f.line))
     return Report(findings=findings, meta=meta)
@@ -80,6 +100,10 @@ def main(argv=None) -> int:
                          "baseline file (reasons to be edited by hand)")
     ap.add_argument("--no-kernel-contracts", action="store_true",
                     help="skip the (jax-importing) kernel contract sweep")
+    ap.add_argument("--only", action="append", choices=PASSES,
+                    metavar="PASS", default=None,
+                    help="run only the named pass(es); repeatable "
+                         f"(choices: {', '.join(PASSES)})")
     args = ap.parse_args(argv)
 
     root = Path(args.root) if args.root else _find_root(Path.cwd())
@@ -87,7 +111,8 @@ def main(argv=None) -> int:
         else root / DEFAULT_BASELINE
 
     try:
-        report = run_all(root, skip_kernel_contracts=args.no_kernel_contracts)
+        report = run_all(root, skip_kernel_contracts=args.no_kernel_contracts,
+                         only=args.only)
     except Exception as e:          # noqa: BLE001 - CLI boundary
         print(f"repro.lint: internal error: {type(e).__name__}: {e}",
               file=sys.stderr)
@@ -95,7 +120,9 @@ def main(argv=None) -> int:
 
     baseline = Baseline.load(baseline_path)
     new = report.new_vs(baseline)
-    stale = baseline.stale(report)
+    # a partial (--only) run can't judge staleness: entries from the
+    # passes that didn't run are absent by construction, not fixed
+    stale = [] if args.only else baseline.stale(report)
 
     if args.json:
         payload = report.to_json()

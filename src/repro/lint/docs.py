@@ -1,0 +1,115 @@
+"""Pass — documentation consistency (fast, no jax import).
+
+Two rules over the markdown the repo commits as load-bearing docs
+(``README.md``, ``docs/``, ``src/repro/kernels/README.md``,
+``benchmarks/README.md``):
+
+- ``broken-link``: every relative markdown link must resolve to a file or
+  directory in the repo.  External (``http``/``https``/``mailto``) links
+  and same-page ``#anchor`` links are skipped; a trailing ``#anchor`` on a
+  relative link is stripped before resolution.  This is what keeps the
+  cross-reference web (README -> docs/ARCHITECTURE.md -> module READMEs)
+  from silently rotting as files move.
+- ``knob-undocumented``: every ``REPRO_*`` environment knob named in
+  ``src/`` must appear in the README's knob table.  The README promises
+  "all REPRO_* env vars in one place"; this rule makes that promise a
+  gate instead of a hope.
+
+Both rules are error-severity: a broken doc link or an undocumented knob
+fails ``--fail-on-new`` unless baselined.  The pass reads only text files
+(no imports, no jax), so CI can run ``--only docs`` in seconds.
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+from repro.lint.findings import Finding
+
+# [text](target) — target captured lazily so ")" in prose doesn't bleed in;
+# image links ![alt](target) match the same way via the optional "!"
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_KNOB = re.compile(r"\bREPRO_[A-Z][A-Z0-9_]*\b")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:")
+
+
+def doc_files(root: Path) -> list[Path]:
+    """The committed markdown the cross-reference rules cover."""
+    root = Path(root)
+    out = [root / "README.md",
+           root / "src" / "repro" / "kernels" / "README.md",
+           root / "benchmarks" / "README.md"]
+    docs = root / "docs"
+    if docs.is_dir():
+        out.extend(sorted(docs.rglob("*.md")))
+    return [p for p in out if p.exists()]
+
+
+def _iter_links(text: str):
+    """Yield (line_number, target) for every markdown link in ``text``,
+    skipping fenced code blocks (``` ... ```) where link syntax is usually
+    example code, not a reference."""
+    fenced = False
+    for i, line in enumerate(text.splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            continue
+        if fenced:
+            continue
+        for m in _LINK.finditer(line):
+            yield i, m.group(1)
+
+
+def _check_links(root: Path, path: Path) -> list:
+    findings = []
+    rel = path.relative_to(root).as_posix()
+    for line, target in _iter_links(path.read_text().replace("\r", "")):
+        if target.startswith(_SKIP_SCHEMES) or target.startswith("#"):
+            continue
+        dest = target.split("#", 1)[0]
+        if not dest:
+            continue
+        resolved = (path.parent / dest).resolve()
+        if not resolved.exists():
+            findings.append(Finding(
+                pass_name="docs", rule="broken-link", path=rel,
+                symbol="", line=line, key=target,
+                message=f"link target `{target}` does not resolve "
+                        f"(looked at {resolved})"))
+    return findings
+
+
+def _knobs_in_sources(root: Path) -> dict[str, tuple[str, int]]:
+    """REPRO_* knob names appearing anywhere under src/, mapped to one
+    (repo-relative path, line) witness each."""
+    knobs: dict[str, tuple[str, int]] = {}
+    for path in sorted((Path(root) / "src").rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        for i, line in enumerate(path.read_text().splitlines(), 1):
+            for m in _KNOB.finditer(line):
+                knobs.setdefault(m.group(0), (rel, i))
+    return knobs
+
+
+def run(root: Path) -> tuple[list, dict]:
+    root = Path(root)
+    findings = []
+    files = doc_files(root)
+    for path in files:
+        findings.extend(_check_links(root, path))
+
+    knobs = _knobs_in_sources(root)
+    readme = root / "README.md"
+    documented = set(_KNOB.findall(readme.read_text())) \
+        if readme.exists() else set()
+    for knob, (path, line) in sorted(knobs.items()):
+        if knob not in documented:
+            findings.append(Finding(
+                pass_name="docs", rule="knob-undocumented", path=path,
+                symbol="", line=line, key=knob,
+                message=f"env knob {knob} is read in src/ but missing "
+                        f"from the README.md knob table"))
+
+    meta = {"doc_files": [p.relative_to(root).as_posix() for p in files],
+            "knobs": sorted(knobs)}
+    return findings, meta

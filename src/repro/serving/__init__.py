@@ -8,6 +8,9 @@
 # counters.  AsyncHashQueryService adds the concurrent-caller story:
 # future-per-request submit, deadline-based batch coalescing, bounded-queue
 # admission control, and write requests interleaved with query flushes.
+# RefreshManager closes the learning loop: online re-learn of the bilinear
+# projections from accumulated rows, shadow rebuild, and a zero-downtime
+# generation swap under the index lock.
 from repro.serving.async_service import (AsyncHashQueryService,
                                          DeadlineBatcher, QueueFullError,
                                          ServiceClosedError)
@@ -15,4 +18,5 @@ from repro.serving.batch_query import (batched_rerank, hash_database_all,
                                        hash_queries_all, pad_candidates)
 from repro.serving.lsm import LSMMultiTableIndex
 from repro.serving.multi_table import BatchQueryResult, MultiTableIndex
+from repro.serving.refresh import RefreshManager
 from repro.serving.service import HashQueryService

@@ -425,6 +425,21 @@ class AsyncHashQueryService:
         req.future.set_result(out)
         return 1
 
+    # -- online refresh ------------------------------------------------------
+
+    def refresh(self, wait: bool = True, warm_batches: tuple = ()) -> bool:
+        """Trigger an online re-learn + generation swap (see
+        HashQueryService.refresh).  The learn/build phases run entirely
+        outside ``_service_lock`` — query flushes keep flowing against the
+        old generation until the swap's bounded critical section — so this
+        is safe to call from any thread, including with wait=True."""
+        with self._service_lock:
+            service = self.service
+        # delegate OFF the lock: the refresh manager serializes itself and
+        # the index lock protects the swap; holding _service_lock across a
+        # multi-second learn would stall every flush
+        return service.refresh(wait=wait, warm_batches=warm_batches)
+
     # -- counters ------------------------------------------------------------
 
     def stats(self) -> dict:

@@ -153,6 +153,12 @@ class LSMMultiTableIndex(MultiTableIndex):
         "_x_dev": "_lock", "_x_dev_key": "_lock",
         # compaction state + counters
         "_c": "_lock", "delta_uploads": "_lock",
+        # refresh lifecycle: qcodes hashed off-lock must pair with the
+        # generation whose device state they will scan — every consumer
+        # snapshots (families, generation) and the code/table state under
+        # ONE lock hold (see insert / query_scan_batch / service._answer)
+        "families": "_lock", "tables": "_lock",
+        "generation": "_lock", "refreshes": "_lock",
     }
     # _bcap: _upload_new_base reads it off-lock by design (only swaps move
     # it, and uploads are serialized by _Compaction.uploading) — the static
@@ -215,41 +221,75 @@ class LSMMultiTableIndex(MultiTableIndex):
     def fit(self, x, learn_key=None) -> "LSMMultiTableIndex":
         t0 = time.perf_counter()
         x = jnp.asarray(x, jnp.float32)
-        self.families = [self._make_family(self.table_key(t, learn_key), x)
-                         for t in range(self.num_tables)]
-        codes_all = np.asarray(bq.hash_database_all(
-            self.families, x, use_kernels=self.config.use_kernels))
-        x_np = np.asarray(x)
+        fams = [self._make_family(self.table_key(t, learn_key), x)
+                for t in range(self.num_tables)]
+        self._install(np.asarray(x), fams)
+        self.fit_s = time.perf_counter() - t0
+        return self
+
+    def _hash_bucketed(self, families, x_np: np.ndarray) -> np.ndarray:
+        """(L, cap, W) database codes with the row count padded up to its
+        power-of-two bucket BEFORE hashing, so the jitted hash sees one
+        shape per bucket — a refresh rebuild over a grown-but-same-bucket
+        row count reuses the fit-time trace instead of minting a new one.
+        Padding rows hash to whatever sgn(0)=+1 gives; callers only ever
+        read [:n]."""
         n, d = x_np.shape
+        cap = _pow2_at_least(n, _MIN_CAP)
+        xp = np.zeros((cap, d), np.float32)
+        xp[:n] = x_np
+        return np.asarray(bq.hash_database_all(
+            families, jnp.asarray(xp), use_kernels=self.config.use_kernels))
+
+    def _install(self, x_np: np.ndarray, families, ids: np.ndarray | None = None,
+                 next_id: int | None = None, bcap_floor: int = _MIN_CAP) -> None:
+        """Build the full segment state from scratch: rows [0, n) become the
+        immutable base, the delta starts empty.  ``fit`` calls this with
+        fresh 0..n-1 ids; a refresh shadow (serving.refresh) passes the
+        live rows' EXISTING stable ids (ascending, preserving the row-order
+        == id-order invariant), the live index's id high-water mark, and
+        its sticky base bucket so the swapped-in state keeps every scan
+        trace key warm."""
+        n, d = x_np.shape
+        if ids is None:
+            ids = np.arange(n, dtype=np.int64)
+        else:
+            ids = np.asarray(ids, dtype=np.int64)
+            assert ids.shape == (n,)
+            assert n == 0 or (np.diff(ids) > 0).all(), \
+                "stable ids must ascend with rows"
+        hi = int(next_id if next_id is not None
+                 else (ids[-1] + 1 if n else 0))
+        codes_all = self._hash_bucketed(families, x_np)
         ll, w = self.num_tables, codes_all.shape[2]
         with self._lock:
             cap = _pow2_at_least(n, _MIN_CAP)
-            self._codes_buf = np.zeros((ll, cap, w), np.uint32)
-            self._codes_buf[:, :n] = codes_all
+            self._codes_buf = codes_all.copy()   # cap rows == hash bucket
             self._x_buf = np.zeros((cap, d), np.float32)
             self._x_buf[:n] = x_np
             self._ids_buf = np.zeros(cap, np.int64)
-            self._ids_buf[:n] = np.arange(n)
+            self._ids_buf[:n] = ids
             self._active_buf = np.zeros(cap, bool)
             self._active_buf[:n] = True
-            self._row_of_buf = np.full(cap, -1, np.int64)
-            self._row_of_buf[:n] = np.arange(n)
+            self._row_of_buf = np.full(_pow2_at_least(hi, _MIN_CAP), -1,
+                                       np.int64)
+            self._row_of_buf[ids] = np.arange(n)
             self._rows, self._base_len, self._frozen_len = n, n, 0
-            self._bcap = _pow2_at_least(n, _MIN_CAP)
-            self._next_id = n
+            self._bcap = _pow2_at_least(n, max(_MIN_CAP, int(bcap_floor)))
+            self._next_id = hi
             self._c = None
             self.compactions = 0
+            self.families = list(families)
             self._refresh_views()
             # host probe tables keyed by STABLE ID (== row at fit time, but
             # never renumbered after): compaction leaves them untouched
-            self.tables = [SingleHashTable(codes_all[t], self.config.bits)
+            self.tables = [SingleHashTable(codes_all[t, :n],
+                                           self.config.bits, ids=ids)
                            for t in range(ll)]
             self._base_version += 1
             self._base_mask_version += 1
             self._delta_version += 1
             self.version += 1
-        self.fit_s = time.perf_counter() - t0
-        return self
 
     def _refresh_views(self) -> None:
         """Re-point the parent-compat attributes at the buffer prefixes.
@@ -316,27 +356,56 @@ class LSMMultiTableIndex(MultiTableIndex):
         k = x_new.shape[0]
         if k == 0:
             return np.empty((0,), dtype=np.int64)
-        new_codes = np.asarray(
-            bq.hash_database_all(self.families, jnp.asarray(x_new),
-                                 use_kernels=self.config.use_kernels))
+        # hash OFF the lock, against a generation-stamped family snapshot: a
+        # refresh swap between the hash and the append would otherwise file
+        # old-generation codes under the new generation's tables.  On the
+        # (rare) losing race, rehash with the new families and retry.
+        while True:
+            with self._lock:
+                fams, gen = self.families, self.generation
+            new_codes = np.asarray(
+                bq.hash_database_all(fams, jnp.asarray(x_new),
+                                     use_kernels=self.config.use_kernels))
+            with self._lock:
+                if self.generation == gen:
+                    ids = self._append_rows(x_new, new_codes)
+                    break
+        self._maybe_compact()
+        return ids
+
+    def _append_rows(self, x_new: np.ndarray, new_codes: np.ndarray,
+                     ids: np.ndarray | None = None) -> np.ndarray:
+        # lock held by caller.  Append pre-hashed rows to the live delta;
+        # ids defaults to fresh ones past the high-water mark (insert), the
+        # refresh catch-up loop passes the EXISTING stable ids of rows it
+        # mirrors into the shadow.
+        k = x_new.shape[0]
+        if k == 0:
+            return np.empty((0,), dtype=np.int64)
         with self._lock:
             r0 = self._rows
+            if ids is None:
+                ids = np.arange(self._next_id, self._next_id + k,
+                                dtype=np.int64)
+            else:
+                ids = np.asarray(ids, dtype=np.int64)
+                assert int(ids[0]) >= self._next_id \
+                    and bool((np.diff(ids) > 0).all()), \
+                    "appended ids must keep row order == id order"
             self._grow_rows(r0 + k)
-            self._grow_ids(self._next_id + k)
-            ids = np.arange(self._next_id, self._next_id + k, dtype=np.int64)
+            self._grow_ids(int(ids[-1]) + 1)
             self._codes_buf[:, r0:r0 + k] = new_codes
             self._x_buf[r0:r0 + k] = x_new
             self._ids_buf[r0:r0 + k] = ids
             self._active_buf[r0:r0 + k] = True
             self._row_of_buf[ids] = np.arange(r0, r0 + k, dtype=np.int64)
-            self._next_id += k
+            self._next_id = max(self._next_id, int(ids[-1]) + 1)
             self._rows = r0 + k
             self._refresh_views()
             for t in range(self.num_tables):
                 self.tables[t].insert(new_codes[t], ids)
             self._delta_version += 1
             self.version += 1
-        self._maybe_compact()
         return ids
 
     def delete(self, ids) -> None:
@@ -449,6 +518,10 @@ class LSMMultiTableIndex(MultiTableIndex):
                 c.uploading = False
             raise
         with self._lock:
+            if self._c is not c:
+                # a refresh swap adopted a whole new segment state while the
+                # upload ran — this compaction's target is stale; drop it
+                return 0
             self._finish_swap(c, dev_codes, dev_x)
             self.compaction_steps += 1
         return 1
@@ -522,6 +595,71 @@ class LSMMultiTableIndex(MultiTableIndex):
         self.version += 1
         self.compactions += 1
         self._c = None
+
+    # -- online refresh (serving.refresh drives this) ------------------------
+
+    def _adopt_refresh(self, shadow: "LSMMultiTableIndex") -> None:
+        # lock held by caller.  Atomic generation swap: adopt the shadow
+        # index's entire segment state (buffers, families, tables, device
+        # caches) by pointer flip.  The live index object's identity is
+        # unchanged — services and threads holding a reference see the new
+        # generation on their next locked read.  In-flight queries that
+        # already snapshotted the old handles finish against the old
+        # generation (the old buffers stay valid arrays).  Any in-flight
+        # compaction is abandoned (_c = None; compaction_step re-checks).
+        with shadow._lock:
+            self._codes_buf = shadow._codes_buf
+            self._x_buf = shadow._x_buf
+            self._ids_buf = shadow._ids_buf
+            self._active_buf = shadow._active_buf
+            self._row_of_buf = shadow._row_of_buf
+            self._rows = shadow._rows
+            self._base_len = shadow._base_len
+            self._frozen_len = 0
+            self._bcap = shadow._bcap
+            self._next_id = max(self._next_id, shadow._next_id)
+            self.families = shadow.families
+            self.tables = shadow.tables
+            self._refresh_views()
+            self._base_version += 1
+            self._base_mask_version += 1
+            self._delta_version += 1
+            # adopt the shadow's warm single-device caches where current, so
+            # a pre-warmed swap serves its first query without an upload
+            if shadow._base_codes_key == (shadow._base_version, None):
+                self._base_codes_dev = shadow._base_codes_dev
+                self._base_codes_key = (self._base_version, None)
+            else:
+                self._base_codes_dev, self._base_codes_key = None, None
+            if shadow._base_active_key == (shadow._base_version,
+                                           shadow._base_mask_version):
+                self._base_active_dev = shadow._base_active_dev
+                self._base_active_key = (self._base_version,
+                                         self._base_mask_version)
+            else:
+                self._base_active_dev, self._base_active_key = None, None
+            if shadow._base_x_key == shadow._base_version:
+                self._base_x_dev = shadow._base_x_dev
+                self._base_x_key = self._base_version
+            else:
+                self._base_x_dev, self._base_x_key = None, None
+            if (shadow._delta_key == shadow._delta_version
+                    and shadow._rows > shadow._base_len):
+                self._delta_codes_dev = shadow._delta_codes_dev
+                self._delta_x_dev = shadow._delta_x_dev
+                self._delta_active_dev = shadow._delta_active_dev
+                self._delta_key = self._delta_version
+            else:
+                self._delta_codes_dev = self._delta_x_dev = None
+                self._delta_active_dev = self._delta_key = None
+            self._x_dev, self._x_dev_key = None, None
+            self.device_uploads += shadow.device_uploads
+            self.scan_state_rebuilds += shadow.scan_state_rebuilds
+            self.delta_uploads += shadow.delta_uploads
+        self._c = None
+        self.version += 1
+        self.generation += 1
+        self.refreshes += 1
 
     def compact(self) -> np.ndarray:
         """Synchronous full compaction: begin + drive every incremental
@@ -797,8 +935,11 @@ class LSMMultiTableIndex(MultiTableIndex):
             bcap = (self._bcap if mesh is None
                     else _pow2_at_least(split, _MIN_CAP))
             dcap = _pow2_at_least(delta_len, self._delta_floor)
+            fams = self.families    # snapshot WITH the device handles: a
+            # refresh swap between this block and the hash below must not
+            # pair new-generation qcodes with old-generation codes
         qcodes = bq.hash_queries_all(
-            self.families, w, use_kernels=cfg.use_kernels)    # (L, B, W)
+            fams, w, use_kernels=cfg.use_kernels)             # (L, B, W)
         select = cfg.fused_select
         pack = cfg.cand_pack
         d_m = i_m = None
@@ -865,8 +1006,8 @@ class LSMMultiTableIndex(MultiTableIndex):
     # -- counters ------------------------------------------------------------
 
     def stats(self) -> dict:
-        st = super().stats()
         with self._lock:
+            st = super().stats()
             st.update({
                 "backend": "lsm",
                 "base_rows": self._base_len,

@@ -72,6 +72,12 @@ class MultiTableIndex:
         self._next_id = 0
         self.compactions = 0
         self.version = 0                    # bumped on insert/delete/compact
+        # projection generation: bumped only when a refresh swap replaces
+        # the hash families (serving.refresh) — the monolithic index never
+        # moves it.  Version bumps strictly dominate generation bumps, so
+        # version-keyed caches stay correct across a swap.
+        self.generation = 0
+        self.refreshes = 0
         self.fit_s = 0.0
         # observability: how often index state crosses the PCIe/ICI boundary
         # and how much compaction work ran.  The monolithic index re-uploads
@@ -497,6 +503,8 @@ class MultiTableIndex:
             "compactions": self.compactions,
             "bits": self.config.bits,
             "version": self.version,
+            "generation": self.generation,
+            "refreshes": self.refreshes,
             "device_uploads": self.device_uploads,
             "scan_state_rebuilds": self.scan_state_rebuilds,
             "compaction_steps": self.compaction_steps,

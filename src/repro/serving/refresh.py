@@ -1,0 +1,318 @@
+"""Online re-learning with a zero-downtime generation swap.
+
+The paper's claim is that *learned* bilinear functions keep codes short yet
+discriminative (§4) — but a served index learns its projections once, at
+``fit``, and the distribution it serves drifts away from the distribution it
+learned on.  ``RefreshManager`` closes the loop: it periodically re-learns
+the projections from the rows the index has actually accumulated and swaps
+the rebuilt index in under live traffic.
+
+One refresh runs in five phases, all but the last off the query path:
+
+1. **snapshot** — under the index lock, copy the live rows (features +
+   stable ids) and the id high-water mark; release the lock.  Queries and
+   ingest continue against the current generation.
+2. **learn** — re-learn the per-table hash families from the snapshot with
+   the existing learning framework (``core.learning.learn_lbh`` via
+   ``_make_family``), under a key derived from ``(config.seed, generation)``
+   — same snapshot + seed + generation in ⇒ bit-identical projections out.
+   With ``config.refresh_traffic_sample``, the learning pool is narrowed to
+   the snapshot rows with the smallest margin to recently served query
+   hyperplanes (the rows current traffic actually discriminates on).
+3. **build** — hash the snapshot under the new families and construct a
+   complete shadow ``LSMMultiTableIndex`` (codes, probe tables keyed by the
+   ORIGINAL stable ids, device caches), pinned to the live index's sticky
+   pad bucket so the swapped-in state hits the very same scan trace keys.
+4. **catch-up** — rows inserted while learning ran are found by stable id
+   (everything past the snapshot high-water mark), hashed under the new
+   families, and appended to the shadow's delta; the loop repeats until the
+   gap is small.  Optionally the shadow is *warmed*: a few scan batches run
+   against it off the query path, compiling any new-generation jit traces
+   (e.g. seeded -> materialized hash dispatch on the first refresh) before
+   the swap, not after.
+5. **swap** — one bounded critical section under the index lock: final
+   catch-up (the gap is now O(one learn-interval's tail)), a liveness
+   reconcile (rows deleted mid-refresh get tombstoned in the shadow), then
+   ``LSMMultiTableIndex._adopt_refresh`` — pointer flips that graft the
+   shadow's entire segment state into the live index object.  This section
+   is the only pause a concurrent query can observe, and it is measured
+   (``last_swap_pause_s``, gated in benchmarks/check_regression.py).
+
+Swap semantics (what callers may rely on):
+
+- The live index OBJECT survives — services and threads keep their
+  reference; they see the new generation on their next locked read.
+- In-flight queries that already snapshotted device handles under the lock
+  finish against the OLD generation (its buffers stay valid arrays); no
+  answer ever mixes generations.  ``insert`` re-checks the generation after
+  hashing and rehashes on the (rare) losing race.
+- ``version`` bumps (so the service's query-code LRU cache and any
+  version-keyed device state invalidate), and ``generation`` bumps (so
+  callers can tell a refresh from an ordinary mutation).
+- Stable ids survive: the shadow's tables carry the original ids, so ids
+  handed out before a refresh keep resolving after it.
+- Results are NOT bit-identical across the swap by design — the projections
+  changed; that is the point.  Within one generation, determinism is
+  unchanged, and re-running a refresh from the same snapshot + seed +
+  generation reproduces the swapped-in index bit-for-bit.
+
+Lock ordering: the manager only ever takes ``index._lock`` -> ``shadow
+._lock`` (never the reverse), so the two-index dance cannot deadlock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import batch_query as bq
+from repro.serving.lsm import _MIN_CAP, LSMMultiTableIndex, _pow2_at_least
+
+# learn-key namespace: fold_in(PRNGKey(seed), _LEARN_TAG + new_generation)
+# keeps refresh keys disjoint from fit-time table keys (small t values)
+_LEARN_TAG = 0x5EED
+
+
+class RefreshManager:
+    """Drives online re-learn + shadow build + atomic generation swap for
+    one ``LSMMultiTableIndex``.  At most one refresh runs at a time; extra
+    triggers are coalesced (``refresh`` returns False).  Thread-safe."""
+
+    # Lock discipline, machine-checked by repro.lint: the tiny manager lock
+    # owns only the lifecycle flag and worker handle.  The last_* /
+    # refreshes_done counters are written by the single refresh worker and
+    # read lock-free by stats() — monotonic snapshots, racy by design.
+    _GUARDED_BY = {"_busy": "_mu", "_thread": "_mu"}
+
+    def __init__(self, index: LSMMultiTableIndex, recent_queries: int = 256):
+        self.index = index
+        self._mu = threading.Lock()
+        self._busy = False
+        self._thread: threading.Thread | None = None
+        # ring of recently served query hyperplanes for the traffic-weighted
+        # learning pool (config.refresh_traffic_sample); deque ops are
+        # atomic, so the serving threads append without a lock
+        self._recent_w: deque[np.ndarray] = deque(maxlen=int(recent_queries))
+        self.refreshes_started = 0
+        self.refreshes_done = 0
+        self.last_learn_s = 0.0
+        self.last_build_s = 0.0
+        self.last_swap_pause_s = 0.0
+        self.last_catchup_rows = 0
+        self.last_refresh_s = 0.0
+
+    # -- traffic observation -------------------------------------------------
+
+    def note_queries(self, ws: np.ndarray) -> None:
+        """Record served query hyperplanes (service calls this per batch)."""
+        for w in np.atleast_2d(np.asarray(ws, np.float32)):
+            self._recent_w.append(w)
+
+    def _learning_pool(self, x_snap: np.ndarray):
+        """Rows the re-learn samples from.  Default: the full snapshot
+        (``_make_family`` subsamples ``lbh_sample`` of them, seeded).  With
+        refresh_traffic_sample and recent queries on record: the snapshot
+        rows with the smallest minimum margin to the recent hyperplanes —
+        the rows near current decision boundaries, where code quality is
+        actually paid for."""
+        cfg = self.index.config
+        recent = list(self._recent_w)
+        if not cfg.refresh_traffic_sample or not recent:
+            return jnp.asarray(x_snap)
+        w = np.stack(recent)                               # (R, d)
+        norms = np.linalg.norm(w, axis=1)
+        norms[norms == 0] = 1.0
+        margins = np.abs(x_snap @ w.T) / norms             # (n, R)
+        near = margins.min(axis=1)
+        pool_n = min(x_snap.shape[0], max(4 * cfg.lbh_sample, cfg.lbh_sample))
+        keep = np.sort(np.argsort(near, kind="stable")[:pool_n])
+        return jnp.asarray(x_snap[keep])
+
+    # -- trigger -------------------------------------------------------------
+
+    def refresh(self, wait: bool = True, warm_batches: tuple = (),
+                warm_l: int = 16) -> bool:
+        """Run one refresh cycle.  wait=False runs it on a daemon worker
+        (``wait_idle`` joins it).  Returns False when a refresh is already
+        in flight (the trigger is coalesced) or the index has no live rows.
+
+        warm_batches: batch sizes to pre-compile the new generation's scan
+        traces with before the swap (pass the serving batch buckets);
+        warm_l: the scan depth those warm queries use (match the service's
+        scan_l — the depth is a static jit arg)."""
+        with self._mu:
+            if self._busy:
+                return False
+            self._busy = True
+            self.refreshes_started += 1
+        if wait:
+            return self._run_guarded(warm_batches, warm_l)
+        t = threading.Thread(target=self._run_guarded,
+                             args=(warm_batches, warm_l),
+                             name="index-refresh", daemon=True)
+        with self._mu:
+            self._thread = t
+        t.start()
+        return True
+
+    def wait_idle(self, timeout: float | None = None) -> None:
+        """Join the in-flight background refresh, if any."""
+        with self._mu:
+            t = self._thread
+        if t is not None:
+            t.join(timeout)
+
+    def _run_guarded(self, warm_batches, warm_l) -> bool:
+        try:
+            return self._run(warm_batches, warm_l)
+        finally:
+            with self._mu:
+                self._busy = False
+
+    # -- the refresh cycle ---------------------------------------------------
+
+    def _run(self, warm_batches, warm_l) -> bool:
+        idx = self.index
+        cfg = idx.config
+        t_all = time.perf_counter()
+        # phase 1: snapshot live rows + id high-water mark
+        with idx._lock:
+            if idx.x_np is None:
+                return False
+            rows = idx._rows
+            live = np.flatnonzero(idx._active_buf[:rows])
+            ids_snap = idx._ids_buf[live].copy()
+            x_snap = idx._x_buf[live].copy()
+            seen = int(idx._next_id)
+            gen = int(idx.generation)
+            bcap = int(idx._bcap)
+        if x_snap.shape[0] == 0:
+            return False
+
+        # phase 2: re-learn the families off the query path
+        t0 = time.perf_counter()
+        shadow_cfg = dataclasses.replace(cfg, method=cfg.refresh_method,
+                                         lsm_auto=False)
+        shadow = LSMMultiTableIndex(shadow_cfg, tables=idx.num_tables)
+        learn_key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
+                                       _LEARN_TAG + gen + 1)
+        pool = self._learning_pool(x_snap)
+        fams = [shadow._make_family(shadow.table_key(t, learn_key), pool)
+                for t in range(shadow.num_tables)]
+        self.last_learn_s = time.perf_counter() - t0
+
+        # phase 3: build the shadow — snapshot rows become its base, keyed
+        # by their ORIGINAL stable ids, pinned to the live pad bucket
+        t0 = time.perf_counter()
+        shadow._install(x_snap, fams, ids=ids_snap, next_id=seen,
+                        bcap_floor=bcap)
+
+        # phase 4: catch up on rows inserted while we learned, then warm
+        caught = 0
+        for _ in range(16):
+            seen2, k = self._catchup_round(shadow, fams, seen)
+            caught += k
+            if seen2 == seen:
+                break
+            seen = seen2
+        if warm_batches:
+            self._warm(shadow, x_snap, warm_batches, warm_l)
+        self.last_build_s = time.perf_counter() - t0
+
+        # phase 5: the swap — the only pause traffic can observe
+        t0 = time.perf_counter()
+        with idx._lock:
+            # the lock is held: no new ids can appear after this round
+            _, k = self._catchup_round(shadow, fams, seen)
+            caught += k
+            self._reconcile_deletes(shadow)
+            idx._adopt_refresh(shadow)
+        self.last_swap_pause_s = time.perf_counter() - t0
+        self.last_catchup_rows = caught
+        self.last_refresh_s = time.perf_counter() - t_all
+        self.refreshes_done += 1
+        return True
+
+    def _catchup_round(self, shadow: LSMMultiTableIndex, fams,
+                       seen: int) -> tuple[int, int]:
+        """Mirror live rows with ids in [seen, live high-water mark) into
+        the shadow's delta, hashed under the NEW families.  Returns the new
+        high-water mark and the number of rows appended.  Rows already
+        deleted live are skipped here (and rows deleted after their mirror
+        are handled by _reconcile_deletes at swap time)."""
+        idx = self.index
+        with idx._lock:
+            hi = int(idx._next_id)
+            if hi <= seen:
+                return hi, 0
+            cand = np.arange(seen, hi, dtype=np.int64)
+            rows = idx._row_of_buf[cand]
+            ok = rows >= 0
+            rows_ok = rows[ok]
+            act = idx._active_buf[rows_ok]
+            ids_new = cand[ok][act]
+            x_new = idx._x_buf[rows_ok[act]].copy()
+        k = x_new.shape[0]
+        if k == 0:
+            return hi, 0
+        # pad the hash to a power-of-two bucket: catch-up sizes are
+        # arbitrary, and each distinct size would mint a db-hash trace
+        kcap = _pow2_at_least(k, _MIN_CAP)
+        xp = np.zeros((kcap, x_new.shape[1]), np.float32)
+        xp[:k] = x_new
+        codes = np.asarray(bq.hash_database_all(
+            fams, jnp.asarray(xp),
+            use_kernels=shadow.config.use_kernels))[:, :k]
+        shadow._append_rows(x_new, codes, ids=ids_new)
+        return hi, k
+
+    def _reconcile_deletes(self, shadow: LSMMultiTableIndex) -> None:
+        """Tombstone, in the shadow, every row the live index deleted after
+        that row was snapshotted/mirrored.  Runs under the live lock at
+        swap time, so the live mask cannot move underneath it."""
+        idx = self.index
+        with shadow._lock:
+            srows = np.flatnonzero(shadow._active_buf[:shadow._rows])
+            sids = shadow._ids_buf[srows]
+        rows = idx._row_of_buf[sids]
+        ok = rows >= 0
+        alive = np.zeros(sids.size, dtype=bool)
+        alive[ok] = idx._active_buf[rows[ok]]
+        dead = sids[~alive]
+        if dead.size:
+            shadow.delete(dead)
+
+    def _warm(self, shadow: LSMMultiTableIndex, x_snap: np.ndarray,
+              warm_batches, warm_l: int) -> None:
+        """Compile the new generation's scan/hash traces against the shadow
+        BEFORE the swap (off the query path).  Matters most on the first
+        refresh, where the hash dispatch itself changes (seeded kernel ->
+        materialized learned factors)."""
+        n, d = x_snap.shape
+        for b in warm_batches:
+            b = int(b)
+            ws = x_snap[np.arange(b) % n] if n else np.zeros((b, d),
+                                                             np.float32)
+            shadow.query_scan_batch(ws, l=warm_l)
+
+    # -- counters ------------------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._mu:
+            busy = self._busy
+        return {
+            "busy": busy,
+            "refreshes_started": self.refreshes_started,
+            "refreshes_done": self.refreshes_done,
+            "last_learn_s": self.last_learn_s,
+            "last_build_s": self.last_build_s,
+            "last_swap_pause_ms": 1e3 * self.last_swap_pause_s,
+            "last_catchup_rows": self.last_catchup_rows,
+            "last_refresh_s": self.last_refresh_s,
+            "recent_queries": len(self._recent_w),
+        }

@@ -42,6 +42,7 @@ import numpy as np
 from repro.core.indexer import QueryResult
 from repro.serving import batch_query as bq
 from repro.serving.multi_table import MultiTableIndex
+from repro.serving.refresh import RefreshManager
 
 
 class HashQueryService:
@@ -79,6 +80,12 @@ class HashQueryService:
         self.inserted_rows = 0
         self.deletes = 0
         self.deleted_rows = 0
+        # online refresh (serving.refresh): available when the index
+        # supports the generation swap (the LSM index); created eagerly so
+        # concurrent first triggers can't race a lazy constructor
+        self.refresher = (RefreshManager(index)
+                          if hasattr(index, "_adopt_refresh") else None)
+        self._refresh_mark = 0   # inserted_rows at the last auto trigger
 
     def _index_lock(self):
         """The index's mutation lock when it has one (the LSM index runs a
@@ -96,7 +103,37 @@ class HashQueryService:
         ids = self.index.insert(x_new)
         self.inserts += 1
         self.inserted_rows += int(ids.size)
+        self._maybe_refresh()
         return ids
+
+    # -- online refresh ------------------------------------------------------
+
+    def refresh(self, wait: bool = True, warm_batches: tuple = ()) -> bool:
+        """Re-learn the hash families from the accumulated rows and swap
+        the rebuilt index in (serving.refresh.RefreshManager; requires the
+        LSM index).  wait=False runs it on a background worker, off the
+        query path.  Returns False when a refresh is already in flight.
+        warm_batches: batch sizes to pre-compile the new generation's scan
+        traces with before the swap (defaults to this service's max_batch
+        bucket for scan mode)."""
+        if self.refresher is None:
+            raise RuntimeError(
+                "refresh() requires an index with generation-swap support "
+                "(serving.lsm.LSMMultiTableIndex)")
+        if not warm_batches and self.mode == "scan":
+            warm_batches = (self.max_batch,)
+        return self.refresher.refresh(wait=wait, warm_batches=warm_batches,
+                                      warm_l=self.scan_l)
+
+    def _maybe_refresh(self) -> None:
+        """Auto policy: start a background refresh once
+        ``config.refresh_ingest_rows`` rows arrived since the last trigger."""
+        thresh = self.index.config.refresh_ingest_rows
+        if (self.refresher is None or thresh is None
+                or self.inserted_rows - self._refresh_mark < thresh):
+            return
+        self._refresh_mark = self.inserted_rows
+        self.refresh(wait=False)
 
     def delete(self, ids) -> None:
         """Forward a streaming delete (tombstone) to the index."""
@@ -155,20 +192,25 @@ class HashQueryService:
             self._cache.popitem(last=False)
 
     def _answer(self, ws: np.ndarray, mask) -> list[QueryResult]:
+        if self.refresher is not None \
+                and self.index.config.refresh_traffic_sample:
+            self.refresher.note_queries(ws)
         if self.mode == "scan":
             return self._answer_scan(ws, mask)
         t_start = time.perf_counter()
         b = ws.shape[0]
         use_cache = mask is None and self.cache_size > 0
-        qcodes = np.asarray(bq.hash_queries_all(
-            self.index.families, ws,
-            use_kernels=self.index.config.use_kernels))
-        keys = [qcodes[:, i, :].tobytes() for i in range(b)]
 
-        # one consistent row space for cache probe + lookup + re-rank + id
-        # translation: cached candidate lists are row-space, so a compaction
-        # swap mid-answer would misattribute them (see _index_lock)
+        # one consistent row space AND hash generation for qcode + cache
+        # probe + lookup + re-rank + id translation: cached candidate lists
+        # are row-space, so a compaction swap mid-answer would misattribute
+        # them — and a refresh swap between hashing and probing would pair
+        # old-generation qcodes with new-generation tables (_index_lock)
         with self._index_lock():
+            qcodes = np.asarray(bq.hash_queries_all(
+                self.index.families, ws,
+                use_kernels=self.index.config.use_kernels))
+            keys = [qcodes[:, i, :].tobytes() for i in range(b)]
             cands: list[np.ndarray | None] = [None] * b
             miss_rows = []
             for i, key in enumerate(keys):
@@ -254,4 +296,6 @@ class HashQueryService:
             "index_scan_state_rebuilds": self.index.scan_state_rebuilds,
             "index_compaction_steps": self.index.compaction_steps,
             "index_compactions": self.index.compactions,
+            "refresh": (None if self.refresher is None
+                        else self.refresher.stats()),
         }

@@ -258,6 +258,62 @@ def test_lock_discipline_nested_def_starts_unlocked():
 
 
 # ---------------------------------------------------------------------------
+# pass: docs consistency (broken links, undocumented env knobs)
+# ---------------------------------------------------------------------------
+
+def _docs_repo(tmp_path, readme: str, src: dict[str, str] | None = None):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    (tmp_path / "README.md").write_text(textwrap.dedent(readme))
+    (tmp_path / "docs" / "GOOD.md").write_text("real\n")
+    for name, body in (src or {}).items():
+        (tmp_path / "src" / "repro" / name).write_text(
+            textwrap.dedent(body))
+    return tmp_path
+
+
+def test_docs_broken_link_flagged(tmp_path):
+    from repro.lint import docs
+    root = _docs_repo(tmp_path, """\
+        [fine](docs/GOOD.md) and [anchored](docs/GOOD.md#sec) resolve;
+        [external](https://example.com/x.md) and [same-page](#usage) are
+        skipped; [ghost](docs/MISSING.md) is the one real rot.
+        ```
+        [inside a code fence](docs/ALSO_MISSING.md) is example text
+        ```
+    """)
+    findings, meta = docs.run(root)
+    assert [(f.rule, f.key) for f in findings] \
+        == [("broken-link", "docs/MISSING.md")]
+    assert "README.md" in meta["doc_files"]
+
+
+def test_docs_knob_undocumented_flagged(tmp_path):
+    from repro.lint import docs
+    root = _docs_repo(tmp_path, """\
+        | `REPRO_DOCUMENTED` | on/off | documented knob |
+    """, src={"mod.py": """\
+        import os
+        a = os.environ.get("REPRO_DOCUMENTED", "1")
+        b = os.environ.get("REPRO_FORGOTTEN", "0")
+    """})
+    findings, meta = docs.run(root)
+    assert [(f.rule, f.key) for f in findings] \
+        == [("knob-undocumented", "REPRO_FORGOTTEN")]
+    assert meta["knobs"] == ["REPRO_DOCUMENTED", "REPRO_FORGOTTEN"]
+
+
+def test_docs_only_pass_selection(tmp_path):
+    """run_all(only=["docs"]) runs just the docs pass — no source
+    discovery, no other pass metadata — so the CI docs job stays fast and
+    dependency-free."""
+    root = _docs_repo(tmp_path, "[ghost](docs/MISSING.md)\n")
+    report = run_all(root, only=["docs"])
+    assert {f.pass_name for f in report.findings} == {"docs"}
+    assert "docs" in report.meta and "jit_stability" not in report.meta
+
+
+# ---------------------------------------------------------------------------
 # baseline / suppression
 # ---------------------------------------------------------------------------
 
@@ -324,6 +380,32 @@ def test_runtime_lock_checks_real_lsm_lifecycle():
         _ = idx.x
         idx.compact()
         idx.stats()
+
+
+def test_runtime_lock_checks_refresh_cycle():
+    """Arm the LSM index (and its shadow — the refresh constructs a second
+    armed instance) and the manager through a full online refresh: every
+    read/write of a guarded attribute across snapshot, catch-up, reconcile
+    and the adopt swap must hold the mapped lock."""
+    from repro.core.indexer import IndexConfig
+    from repro.serving import LSMMultiTableIndex, RefreshManager
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(96, 16)).astype(np.float32)
+    cfg = IndexConfig(method="bh", bits=12, tables=2, seed=0, lsm_auto=False,
+                      lbh_sample=32, lbh_steps=3)
+    with runtime_lock_checks(LSMMultiTableIndex, RefreshManager):
+        idx = LSMMultiTableIndex(cfg).fit(x)
+        ids = idx.insert(rng.normal(size=(8, 16)).astype(np.float32))
+        idx.delete(ids[:2])
+        mgr = RefreshManager(idx)
+        assert mgr.refresh(wait=True, warm_batches=(2,), warm_l=4)
+        with idx._lock:
+            assert idx.generation == 1
+        idx.query_scan_batch(
+            rng.normal(size=(2, 16)).astype(np.float32), l=4)
+        idx.insert(rng.normal(size=(8, 16)).astype(np.float32))
+        idx.stats()
+        mgr.stats()
 
 
 def test_runtime_lock_checks_real_async_service():

@@ -17,7 +17,8 @@ import numpy as np
 import pytest
 
 from repro.core.indexer import IndexConfig
-from repro.serving import AsyncHashQueryService, LSMMultiTableIndex
+from repro.serving import (AsyncHashQueryService, HashQueryService,
+                           LSMMultiTableIndex)
 
 D = 16
 
@@ -57,6 +58,44 @@ def test_lsm_mutation_cycle_no_retrace(trace_counter):
     _lsm_cycle(idx, rng, queries)            # cycle 1: traces warm here
     with trace_counter.assert_no_retrace():
         _lsm_cycle(idx, rng, queries)        # identical cycle 2: zero new
+
+
+def test_refresh_swap_no_retrace(trace_counter):
+    """A steady-state refresh — re-learn, shadow rebuild, generation swap —
+    adds ZERO traces on the warm serving path.  The first refresh pays a
+    one-time cost (the hash dispatch itself changes: seeded kernel ->
+    materialized learned factors) and warms the shadow pre-swap; every
+    refresh after that revisits only warm shapes: the shadow is pinned to
+    the live sticky base bucket, `_install` hashes at the same pow2 row
+    bucket as fit, catch-up hashes pad to pow2, and the swap is pure
+    pointer flips."""
+    rng = np.random.default_rng(5)
+    # n=150 -> 256-row base bucket; every later base (180, 210, 240) and
+    # the refresh snapshots stay inside it; 30-row deltas share the
+    # delta-floor bucket; queries are a fixed (8, D) batch
+    x = rng.normal(size=(150, D)).astype(np.float32)
+    queries = rng.normal(size=(8, D)).astype(np.float32)
+    cfg = IndexConfig(method="bh", bits=14, tables=2, seed=1, lsm_auto=False,
+                      lbh_sample=64, lbh_steps=4)
+    idx = LSMMultiTableIndex(cfg).fit(x)
+    svc = HashQueryService(idx, max_batch=8, mode="scan", scan_l=8)
+
+    def traffic():
+        svc.query_batch(queries)
+        svc.insert(rng.normal(size=(30, D)).astype(np.float32))
+        svc.query_batch(queries)
+
+    traffic()                        # generation-0 warm
+    assert svc.refresh(wait=True)    # refresh 1: one-time learned-path warm
+    traffic()                        # generation-1 warm (materialized hash)
+    with trace_counter.assert_no_retrace():
+        svc.query_batch(queries)
+        svc.insert(rng.normal(size=(30, D)).astype(np.float32))
+        assert svc.refresh(wait=True)   # refresh 2: zero new traces
+        svc.query_batch(queries)
+        svc.insert(rng.normal(size=(30, D)).astype(np.float32))
+        svc.query_batch(queries)
+    assert idx.generation == 2 and idx.refreshes == 2
 
 
 def test_async_ragged_deadline_flushes_no_retrace(trace_counter):
