@@ -51,10 +51,21 @@ a generous 1000ms (observed ~1.5ms); and the steady-state window — warm
 traffic + a full second refresh — must report exactly ZERO new jit
 traces on the serving entrypoints.
 
+PR-10 adds the ``serving_chaos`` gates over the replicated-shard router
+(deterministic and data-seeded, never timed): steady-state coverage must
+be exactly 1.0 with answers bit-identical to a monolithic index; under a
+whole-shard kill every answer must be flagged degraded with coverage >=
+(shards-1)/shards and recall >= 0.9x healthy; after revive, coverage must
+return to 1.0 within the recovery-step cap with post-recovery answers
+bit-identical to pre-kill; and the seeded fault-injection soak must
+complete with ZERO uncaught exceptions.
+
 The gate also refuses a record with no ``serving_async`` sweep rows (or
 inconsistent shed/completion accounting) and one with no ``kernel_sweep``
 rows — the selection-sweep telemetry must keep flowing into the
-trajectory.
+trajectory.  Every named top-level record is fetched through ``_record``:
+a benchmark that silently stopped merging its record fails with
+``record absent: <name>``, not a KeyError traceback.
 
 PR-6 adds the ``serving_mixed`` gates over the LSM delta index: the
 seeded soak must report bit-parity with a fresh monolithic index across
@@ -85,6 +96,8 @@ CAND_PACK_FLOOR = 2.0        # PR-7: int16 packing halves candidate bytes
 HASH_SEEDED_FLOOR = 2.0      # PR-7: seeded projections vs weight stream
 BIG_TABLE_FLOOR = 0.9        # PR-7: >VMEM table fused-vs-unfused QPS
 REFRESH_PAUSE_CAP_MS = 1000.0  # PR-9: generation swap is pointer flips
+CHAOS_RECALL_RATIO = 0.9     # PR-10: degraded recall >= 0.9x healthy
+CHAOS_RECOVERY_CAP = 8       # PR-10: queries until coverage returns to 1.0
 
 
 def _fail(failures: list[str], msg: str) -> None:
@@ -96,25 +109,39 @@ def _ok(msg: str) -> None:
     print(f"  ok: {msg}")
 
 
+def _record(fresh: dict, name: str, failures: list[str]):
+    """Fetch a required top-level benchmark record.  A missing record is a
+    NAMED failure — ``record absent: <name>`` — so a benchmark that
+    silently stopped merging its results reads as exactly that, instead of
+    a bare KeyError traceback from whichever gate touched it first."""
+    rec = fresh.get(name)
+    if rec is None:
+        _fail(failures, f"record absent: {name}")
+    return rec
+
+
 def check(fresh: dict, baseline: dict | None) -> list[str]:
     failures: list[str] = []
 
     # -- modeled HBM-traffic ratio (deterministic) --------------------------
-    ratio = fresh["model_hbm_bytes"]["b32"]["ratio"]
-    if ratio < MODEL_RATIO_FLOOR:
-        _fail(failures, f"modeled B=32 HBM ratio {ratio:.2f}x < "
-                        f"{MODEL_RATIO_FLOOR}x floor")
-    else:
-        _ok(f"modeled B=32 HBM ratio {ratio:.2f}x >= {MODEL_RATIO_FLOOR}x")
-    if baseline is not None:
-        base = baseline["model_hbm_bytes"]["b32"]["ratio"]
-        if ratio < MODEL_BASELINE_SLACK * base:
-            _fail(failures, f"modeled ratio {ratio:.2f}x fell below "
-                            f"{MODEL_BASELINE_SLACK:.0%} of committed "
-                            f"{base:.2f}x")
+    hbm = _record(fresh, "model_hbm_bytes", failures)
+    if hbm is not None:
+        ratio = hbm["b32"]["ratio"]
+        if ratio < MODEL_RATIO_FLOOR:
+            _fail(failures, f"modeled B=32 HBM ratio {ratio:.2f}x < "
+                            f"{MODEL_RATIO_FLOOR}x floor")
         else:
-            _ok(f"modeled ratio within {MODEL_BASELINE_SLACK:.0%} of "
-                f"committed {base:.2f}x")
+            _ok(f"modeled B=32 HBM ratio {ratio:.2f}x >= "
+                f"{MODEL_RATIO_FLOOR}x")
+        if baseline is not None and "model_hbm_bytes" in baseline:
+            base = baseline["model_hbm_bytes"]["b32"]["ratio"]
+            if ratio < MODEL_BASELINE_SLACK * base:
+                _fail(failures, f"modeled ratio {ratio:.2f}x fell below "
+                                f"{MODEL_BASELINE_SLACK:.0%} of committed "
+                                f"{base:.2f}x")
+            else:
+                _ok(f"modeled ratio within {MODEL_BASELINE_SLACK:.0%} of "
+                    f"committed {base:.2f}x")
 
     # -- modeled selection cost: hist must stay >=8x cheaper at l=128 -------
     sel = fresh.get("model_select_ops", {}).get("l128")
@@ -153,11 +180,12 @@ def check(fresh: dict, baseline: dict | None) -> list[str]:
             f">= {HASH_SEEDED_FLOOR}x")
 
     # -- fused-vs-unfused kernel QPS at the batched point -------------------
-    batched = [k for k in fresh["kernel_ms"] if k != "b1"]
-    if not batched:
+    kernel_ms = _record(fresh, "kernel_ms", failures)
+    batched = [k for k in (kernel_ms or {}) if k != "b1"]
+    if kernel_ms is not None and not batched:
         _fail(failures, "no batched kernel_ms row in fresh record")
-    else:
-        row = fresh["kernel_ms"][batched[0]]
+    elif batched:
+        row = kernel_ms[batched[0]]
         qps_ratio = row["unfused_ms"] / row["fused_ms"]
         if qps_ratio < KERNEL_QPS_RATIO_FLOOR:
             _fail(failures, f"batched fused-vs-unfused QPS ratio "
@@ -168,10 +196,10 @@ def check(fresh: dict, baseline: dict | None) -> list[str]:
                 f"({batched[0]})")
 
     # -- b=1 fused kernel: the PR-5 histogram select erased the regression --
-    b1 = fresh["kernel_ms"].get("b1")
-    if b1 is None:
+    b1 = (kernel_ms or {}).get("b1")
+    if kernel_ms is not None and b1 is None:
         _fail(failures, "no b1 kernel_ms row in fresh record")
-    else:
+    elif b1 is not None:
         b1_ratio = b1["unfused_ms"] / b1["fused_ms"]
         if b1_ratio < B1_KERNEL_RATIO_FLOOR:
             _fail(failures, f"b=1 fused-vs-unfused kernel QPS ratio "
@@ -220,28 +248,30 @@ def check(fresh: dict, baseline: dict | None) -> list[str]:
                 f"QPS {big_ratio:.2f}x of unfused")
 
     # -- deep-scan recall gauge (data-seeded, not timed) --------------------
-    recall_keys = [k for k in fresh["serving"]
-                   if k.startswith("recall_at") and not
-                   k.endswith("_shallow")]
-    if not recall_keys:
-        _fail(failures, "no recall gauge in fresh serving record")
-    else:
-        rec = fresh["serving"][recall_keys[0]]
-        if rec < RECALL_FLOOR:
-            _fail(failures, f"deep-scan {recall_keys[0]} {rec:.2f} < "
-                            f"{RECALL_FLOOR} floor (gauge dead or scan "
-                            f"broken)")
+    s = _record(fresh, "serving", failures)
+    if s is not None:
+        recall_keys = [k for k in s
+                       if k.startswith("recall_at") and not
+                       k.endswith("_shallow")]
+        if not recall_keys:
+            _fail(failures, "no recall gauge in fresh serving record")
         else:
-            _ok(f"deep-scan {recall_keys[0]} {rec:.2f} >= {RECALL_FLOOR}")
+            rec = s[recall_keys[0]]
+            if rec < RECALL_FLOOR:
+                _fail(failures, f"deep-scan {recall_keys[0]} {rec:.2f} < "
+                                f"{RECALL_FLOOR} floor (gauge dead or scan "
+                                f"broken)")
+            else:
+                _ok(f"deep-scan {recall_keys[0]} {rec:.2f} >= "
+                    f"{RECALL_FLOOR}")
 
-    # -- single-query serving path vs the legacy per-table loop -------------
-    s = fresh["serving"]
-    b1_ratio = s["qps_b1"] / s["qps_b1_legacy"]
-    if b1_ratio < B1_QPS_RATIO_FLOOR:
-        _fail(failures, f"b=1 fused serving QPS {b1_ratio:.2f}x of legacy "
-                        f"< {B1_QPS_RATIO_FLOOR}x floor")
-    else:
-        _ok(f"b=1 fused serving QPS {b1_ratio:.2f}x of legacy")
+        # -- single-query serving path vs the legacy per-table loop ---------
+        b1_ratio = s["qps_b1"] / s["qps_b1_legacy"]
+        if b1_ratio < B1_QPS_RATIO_FLOOR:
+            _fail(failures, f"b=1 fused serving QPS {b1_ratio:.2f}x of "
+                            f"legacy < {B1_QPS_RATIO_FLOOR}x floor")
+        else:
+            _ok(f"b=1 fused serving QPS {b1_ratio:.2f}x of legacy")
 
     # -- async sweep rows present and internally consistent -----------------
     async_rec = fresh.get("serving_async")
@@ -341,6 +371,73 @@ def check(fresh: dict, baseline: dict | None) -> list[str]:
                             f"shadow rebuild is compiling on the hot path")
         else:
             _ok("steady-state refresh window added zero jit traces")
+
+    # -- replicated-shard router under chaos --------------------------------
+    # All deterministic or data-seeded: coverage fractions, parity flags,
+    # recovery step counts, and the soak exception counter — never timed.
+    chaos = _record(fresh, "serving_chaos", failures)
+    if chaos is not None:
+        healthy = chaos["healthy"]
+        killed = chaos["killed"]
+        recovery = chaos["recovery"]
+        soak_rec = chaos["soak"]
+        shards = chaos["config"]["shards"]
+
+        if healthy["coverage"] != 1.0 or healthy["degraded"]:
+            _fail(failures, f"steady-state cluster coverage "
+                            f"{healthy['coverage']:.2f} != 1.0 (or flagged "
+                            f"degraded with every replica healthy)")
+        elif not healthy["parity_ok"]:
+            _fail(failures, "healthy cluster answers not bit-identical to "
+                            "the monolithic index")
+        else:
+            _ok("cluster steady state: coverage 1.0, answers bit-identical "
+                "to monolithic")
+
+        cov_floor = (shards - 1) / shards
+        if not killed["degraded"]:
+            _fail(failures, "whole-shard kill did not flag answers "
+                            "degraded")
+        elif killed["coverage"] + 1e-9 < cov_floor:
+            _fail(failures, f"coverage under whole-shard loss "
+                            f"{killed['coverage']:.2f} < "
+                            f"{cov_floor:.2f} ((shards-1)/shards — more "
+                            f"than the killed shard went missing)")
+        else:
+            _ok(f"whole-shard kill: degraded answers at coverage "
+                f"{killed['coverage']:.2f} >= {cov_floor:.2f}")
+        if killed["recall"] < CHAOS_RECALL_RATIO * healthy["recall"]:
+            _fail(failures, f"degraded recall {killed['recall']:.2f} < "
+                            f"{CHAOS_RECALL_RATIO}x healthy "
+                            f"{healthy['recall']:.2f}")
+        else:
+            _ok(f"degraded recall {killed['recall']:.2f} >= "
+                f"{CHAOS_RECALL_RATIO}x healthy {healthy['recall']:.2f}")
+
+        if recovery["coverage"] != 1.0 or recovery["steps"] > \
+                CHAOS_RECOVERY_CAP:
+            _fail(failures, f"recovery: coverage "
+                            f"{recovery['coverage']:.2f} after "
+                            f"{recovery['steps']} queries (cap "
+                            f"{CHAOS_RECOVERY_CAP}) — probe/hysteresis "
+                            f"never re-admitted the shard")
+        elif not recovery["post_parity_ok"]:
+            _fail(failures, "post-recovery answers differ from pre-kill "
+                            "answers (catch-up lost or corrupted rows)")
+        else:
+            _ok(f"recovered to full coverage in {recovery['steps']} "
+                f"queries, answers bit-identical to pre-kill")
+
+        if soak_rec["exceptions"] != 0:
+            _fail(failures, f"chaos soak raised "
+                            f"{soak_rec['exceptions']} uncaught "
+                            f"exception(s) across "
+                            f"{soak_rec['injected_faults']} injected "
+                            f"faults")
+        else:
+            _ok(f"chaos soak: 0 uncaught exceptions across "
+                f"{soak_rec['injected_faults']} injected faults "
+                f"(min coverage {soak_rec['min_coverage']:.2f})")
 
     return failures
 

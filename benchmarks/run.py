@@ -18,8 +18,9 @@ def smoke(json_path: str | None = None) -> None:
     """Fast CI path: import every benchmark module (catches bit-rot) and run
     a miniature serving sweep plus the fused-scan benchmark end to end."""
     from benchmarks import (fig2_collision, fig34_active_learning,  # noqa: F401
-                            roofline_table, serving_async, serving_mixed,
-                            serving_refresh, serving_scan, tables_efficiency)
+                            roofline_table, serving_async, serving_chaos,
+                            serving_mixed, serving_refresh, serving_scan,
+                            tables_efficiency)
 
     _section("smoke — serving sweep (tiny)")
     t0 = time.perf_counter()
@@ -48,11 +49,17 @@ def smoke(json_path: str | None = None) -> None:
     serving_refresh.run(json_path=json_path, smoke=True)
     print(f"# refresh smoke ok in {time.perf_counter() - t0:.1f}s")
 
+    _section("smoke — replicated-shard router under fault injection (tiny)")
+    t0 = time.perf_counter()
+    serving_chaos.run(json_path=json_path, smoke=True)
+    print(f"# chaos smoke ok in {time.perf_counter() - t0:.1f}s")
+
 
 def main(json_path: str | None = None) -> None:
     from benchmarks import (fig2_collision, fig34_active_learning,
-                            roofline_table, serving_async, serving_mixed,
-                            serving_refresh, serving_scan, tables_efficiency)
+                            roofline_table, serving_async, serving_chaos,
+                            serving_mixed, serving_refresh, serving_scan,
+                            tables_efficiency)
 
     summary: list[tuple[str, float, str]] = []
 
@@ -111,6 +118,12 @@ def main(json_path: str | None = None) -> None:
     serving_refresh.run(json_path=json_path)
     summary.append(("serving_refresh", (time.perf_counter() - t0) * 1e6,
                     "recall drift/repair + swap pause + retrace count"))
+
+    _section("Serving — replicated-shard router: kill-a-replica recovery")
+    t0 = time.perf_counter()
+    serving_chaos.run(json_path=json_path)
+    summary.append(("serving_chaos", (time.perf_counter() - t0) * 1e6,
+                    "coverage/recall under shard loss + recovery curve"))
 
     _section("Roofline table (from dry-run artifacts)")
     t0 = time.perf_counter()

@@ -1,0 +1,226 @@
+"""Kill-a-replica recovery curve for the replicated-shard router.
+
+serving_mixed.py measures the LSM index under hostile WRITE traffic; this
+benchmark measures the cluster tier (serving.cluster.ShardReplicaRouter)
+under hostile INFRASTRUCTURE: replicas die, stall past their deadline,
+drop responses, and flap — all scripted through serving.faults.FaultPlan
+so every phase is deterministic and replayable.
+
+Four phases, merged into ``BENCH_serving.json`` under ``"serving_chaos"``:
+
+- **healthy** — steady-state gauge: coverage must be exactly 1.0, answers
+  must be bit-identical to a monolithic index over the same rows (refusal
+  gate: no numbers are reported for a cluster that changes answers), and
+  the recall/QPS baselines are taken.
+- **killed** — BOTH replicas of shard 0 go down, the worst case the
+  degraded-answer contract covers: every query keeps answering, flagged
+  ``degraded=True`` with coverage == (shards-1)/shards, and recall against
+  the FULL live corpus stays within 0.9x of healthy (losing 1/k of the
+  rows rarely loses the margin winner).
+- **recovery** — the shard revives; the router's probe + hysteresis
+  re-admits both replicas (catch-up from the router's row log if writes
+  were missed) and the number of queries until coverage returns to 1.0 is
+  the recovery curve's x-axis.  Post-recovery answers must be
+  bit-identical to the pre-kill answers.
+- **soak** — a fresh router under ``FaultPlan.seeded`` chaos (kills,
+  deadline-busting delays, drops, flaps) with live query + write traffic:
+  the gate is ZERO uncaught exceptions — every fault is either failed
+  over, degraded, or repaired, never raised to the caller.
+
+QPS numbers are reported for context only; the regression gates
+(benchmarks/check_regression.py) read coverage, recall ratios, recovery
+steps, parity flags, and the soak exception count — all deterministic.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.indexer import IndexConfig
+from repro.data.synthetic import tiny1m_like
+from repro.serving import (FaultPlan, LSMMultiTableIndex, MultiTableIndex,
+                           ShardReplicaRouter)
+from repro.utils.trajectory import merge_into_json
+
+SHARDS = 4
+REPLICAS = 2
+
+
+def _cfg(bits: int, tables: int) -> IndexConfig:
+    return IndexConfig(method="bh", bits=bits, tables=tables, batch=16)
+
+
+def _recall_at(answers, ws: np.ndarray, x_live: np.ndarray,
+               top: int = 20) -> float:
+    """Fraction of queries whose answer lands in the true margin
+    top-``top`` of x_live (the serving_scan.py gauge, taken on an
+    already-computed BatchQueryResult so degraded answers are judged
+    against the FULL live corpus, not just the covered rows)."""
+    hit = 0
+    for b in range(ws.shape[0]):
+        m = np.abs(x_live @ ws[b]) / np.linalg.norm(ws[b])
+        if answers.nonempty[b] and (m < answers.margins[b] - 1e-12).sum() < top:
+            hit += 1
+    return hit / ws.shape[0]
+
+
+def _same_answer(a, b) -> bool:
+    return (np.array_equal(a.ids_topk, b.ids_topk)
+            and np.array_equal(a.margins_topk, b.margins_topk)
+            and np.array_equal(a.table_hits, b.table_hits))
+
+
+def _gauge(router, ws: np.ndarray, x_live: np.ndarray, scan_l: int,
+           repeat: int) -> dict:
+    """One phase gauge: answers + recall + context QPS over ``repeat``
+    timed batches (the first, warming, batch is untimed)."""
+    res = router.query_scan_batch(ws, l=scan_l, topk=3)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        router.query_scan_batch(ws, l=scan_l, topk=3)
+    dt = time.perf_counter() - t0
+    return {
+        "res": res,
+        "coverage": float(res.coverage),
+        "degraded": bool(res.degraded),
+        "recall": _recall_at(res, ws, x_live),
+        "qps": repeat * ws.shape[0] / max(dt, 1e-9),
+    }
+
+
+def soak(n: int, d: int, bits: int, tables: int, iters: int,
+         seed: int = 0) -> dict:
+    """Seeded chaos soak: scripted kills/delays/drops/flaps under live
+    query + write traffic.  Counts uncaught exceptions (gated == 0) and
+    tracks the worst per-answer coverage seen."""
+    corpus = tiny1m_like(n_labeled=n, n_unlabeled=0, d=d, classes=10,
+                         seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    dd = corpus.x.shape[1]
+    plan = FaultPlan.seeded(seed + 7, SHARDS, REPLICAS,
+                            horizon_calls=iters * 4)
+    router = ShardReplicaRouter(_cfg(bits, tables), shards=SHARDS,
+                                replicas=REPLICAS, deadline_ms=1000.0,
+                                readmit_probes=1, fault_plan=plan)
+    router.fit(corpus.x)
+    ws = rng.normal(size=(8, dd)).astype(np.float32)
+    exceptions = 0
+    min_cov = 1.0
+    live_ids: list[int] = list(range(n))
+    for i in range(iters):
+        try:
+            if i % 5 == 3:
+                ids = router.insert(
+                    rng.normal(size=(16, dd)).astype(np.float32))
+                live_ids.extend(int(g) for g in ids)
+            if i % 7 == 5 and len(live_ids) > 32:
+                k = rng.integers(0, len(live_ids), size=4)
+                dead = sorted({live_ids[j] for j in k})
+                router.delete(np.asarray(dead, dtype=np.int64))
+                live_ids = [g for g in live_ids if g not in set(dead)]
+            res = router.query_scan_batch(ws, l=32, topk=3)
+            min_cov = min(min_cov, float(res.coverage))
+        except Exception:
+            exceptions += 1
+    st = router.stats()
+    return {
+        "iterations": iters,
+        "exceptions": exceptions,
+        "injected_faults": st["faults"]["injected"],
+        "min_coverage": min_cov,
+        "failovers": st["failovers"],
+        "timeouts": st["timeouts"],
+        "replica_downs": st["replica_downs"],
+        "readmits": st["readmits"],
+        "catchups": st["catchups"],
+        "degraded_answers": st["degraded_answers"],
+    }
+
+
+def run(json_path: str | None = None, n: int = 16000, d: int = 64,
+        bits: int = 18, tables: int = 2, scan_l: int = 128,
+        repeat: int = 8, soak_iters: int = 30, recovery_cap: int = 8,
+        smoke: bool = False) -> dict:
+    if smoke:
+        n, repeat, soak_iters = 4000, 4, 20
+    corpus = tiny1m_like(n_labeled=n, n_unlabeled=0, d=d, classes=10)
+    dd = corpus.x.shape[1]
+    rng = np.random.default_rng(0)
+    ws = rng.normal(size=(16, dd)).astype(np.float32)
+
+    plan = FaultPlan()
+    router = ShardReplicaRouter(_cfg(bits, tables), shards=SHARDS,
+                                replicas=REPLICAS, deadline_ms=1000.0,
+                                readmit_probes=2, fault_plan=plan)
+    router.fit(corpus.x)
+
+    # -- healthy steady state + the parity refusal gate
+    t0 = time.perf_counter()
+    ref = MultiTableIndex(_cfg(bits, tables)).fit(corpus.x)
+    healthy = _gauge(router, ws, corpus.x, scan_l, repeat)
+    parity_ok = _same_answer(healthy["res"],
+                             ref.query_scan_batch(ws, l=scan_l, topk=3))
+    print(f"# healthy: coverage={healthy['coverage']:.2f} "
+          f"recall={healthy['recall']:.2f} qps={healthy['qps']:.0f} "
+          f"parity_ok={parity_ok} ({time.perf_counter() - t0:.1f}s)")
+
+    # -- whole-shard outage: answers continue, degraded + partial coverage
+    for r in range(REPLICAS):
+        plan.kill(0, r)
+    killed = _gauge(router, ws, corpus.x, scan_l, repeat)
+    print(f"# killed shard 0: coverage={killed['coverage']:.2f} "
+          f"degraded={killed['degraded']} recall={killed['recall']:.2f} "
+          f"qps={killed['qps']:.0f}")
+
+    # -- revive + recovery curve: queries until coverage returns to 1.0
+    for r in range(REPLICAS):
+        plan.revive(0, r)
+    steps = 0
+    while steps < recovery_cap:
+        steps += 1
+        if router.query_scan_batch(ws, l=scan_l, topk=3).coverage == 1.0:
+            break
+    post = _gauge(router, ws, corpus.x, scan_l, repeat)
+    post_parity_ok = _same_answer(post["res"], healthy["res"])
+    print(f"# recovered: steps={steps} coverage={post['coverage']:.2f} "
+          f"recall={post['recall']:.2f} qps={post['qps']:.0f} "
+          f"post_parity_ok={post_parity_ok}")
+
+    # -- seeded chaos soak: zero uncaught exceptions
+    t0 = time.perf_counter()
+    soak_rec = soak(n=min(n, 4000), d=d, bits=bits, tables=tables,
+                    iters=soak_iters)
+    print(f"# soak: exceptions={soak_rec['exceptions']} "
+          f"injected={soak_rec['injected_faults']} "
+          f"min_coverage={soak_rec['min_coverage']:.2f} "
+          f"readmits={soak_rec['readmits']} "
+          f"({time.perf_counter() - t0:.1f}s)")
+
+    record = {
+        "config": {"n": n, "d": d, "bits": bits, "tables": tables,
+                   "shards": SHARDS, "replicas": REPLICAS,
+                   "scan_l": scan_l, "smoke": smoke},
+        "healthy": {"coverage": healthy["coverage"],
+                    "degraded": healthy["degraded"],
+                    "recall": healthy["recall"], "qps": healthy["qps"],
+                    "parity_ok": bool(parity_ok)},
+        "killed": {"coverage": killed["coverage"],
+                   "degraded": killed["degraded"],
+                   "recall": killed["recall"], "qps": killed["qps"]},
+        "recovery": {"steps": steps, "cap": recovery_cap,
+                     "coverage": post["coverage"],
+                     "recall": post["recall"], "qps": post["qps"],
+                     "post_parity_ok": bool(post_parity_ok)},
+        "soak": soak_rec,
+    }
+    if json_path:
+        merge_into_json(json_path, {"serving_chaos": record})
+        print(f"# merged serving_chaos into {json_path}")
+    return record
+
+
+if __name__ == "__main__":
+    import sys
+    paths = [a for a in sys.argv[1:] if not a.startswith("--")]
+    run(json_path=paths[0] if paths else None, smoke="--smoke" in sys.argv)

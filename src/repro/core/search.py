@@ -16,6 +16,7 @@ from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.utils.bits import hamming_packed
@@ -545,3 +546,87 @@ def margin_rerank_segmented(base_x, delta_x, split, w_batch, candidates,
     m = jnp.where(valid, m, jnp.inf)
     neg, sel = jax.lax.top_k(-m, min(l, candidates.shape[1]))
     return -neg, jnp.take_along_axis(candidates, sel, axis=1)
+
+
+# -- replicated-shard merge contract (serving.cluster) -----------------------
+#
+# serving.cluster.ShardReplicaRouter splits the row space over S shards and
+# asks one healthy replica per shard for its per-table (distance, id) top-l
+# BEFORE any re-rank.  Merging at the Hamming level is what preserves the
+# (dist, id) tie contract under partial coverage: any row in the covered-rows
+# global top-l is necessarily in its own shard's local top-l, so the merged
+# list equals what one scan over the union of covered shards would produce —
+# including tie order (lowest id) and l > n sentinels.  Merging *answers*
+# (post-rerank margins) would not be bit-identical: each shard's candidate
+# union is a superset of the covered-rows index's, and a superset member can
+# displace the true answer.  The margins for the merged candidate set are
+# then recomputed per owning shard via ``margin_batch`` below — the margin's
+# d-reduction is per-row (multiply+reduce), so the values match
+# ``margin_rerank_batch`` bit for bit regardless of which index computes them.
+
+
+def merge_topk_shards(dists: list, ids: list, l: int):
+    """Host-side lexicographic (dist, id) merge of per-shard top-l lists.
+
+    dists/ids: equal-length lists of (..., l_s) numpy arrays, one per
+    covered shard, each sorted ascending by (distance, id) with
+    (DIST_SENTINEL, -1) sentinels in impossible slots.  Ids must already be
+    GLOBAL (the router maps shard-local stable ids to global ids first).
+    Returns (dists (..., l), ids (..., l)) int32/int64 — the combined
+    top-l in the same order a single scan over the union would produce:
+    real distances never reach DIST_SENTINEL, so sentinels sort last, and
+    equal distances resolve to the lowest global id.
+    """
+    d = np.concatenate([np.asarray(a, dtype=np.int64) for a in dists],
+                       axis=-1)
+    i = np.concatenate([np.asarray(a, dtype=np.int64) for a in ids],
+                       axis=-1)
+    # one composite key per slot: dist in the high bits, id+1 in the low 32
+    # (sentinel slots carry id -1 -> 0, real ids are < 2^32-1), so a single
+    # stable argsort realises the (dist, id) lexicographic order.
+    order = np.argsort((d << 32) | (i + 1), axis=-1, kind="stable")
+    d = np.take_along_axis(d, order, axis=-1)[..., :l]
+    i = np.take_along_axis(i, order, axis=-1)[..., :l]
+    have = d.shape[-1]
+    if have < l:
+        pad = [(0, 0)] * (d.ndim - 1) + [(0, l - have)]
+        d = np.pad(d, pad, constant_values=DIST_SENTINEL)
+        i = np.pad(i, pad, constant_values=-1)
+    return d.astype(np.int32), i
+
+
+@jax.jit
+def margin_batch(x, w_batch, candidates, valid):
+    """Per-candidate exact margins |w.x| / ||w|| with NO selection.
+
+    x: (n, d) database; w_batch: (B, d); candidates: (B, C) int row ids
+    (invalid slots may be -1 — they are clipped for the gather and masked);
+    valid: (B, C) bool.  Returns (B, C) float32 margins aligned to the
+    candidate positions, +inf at invalid slots.  Same margin expression as
+    ``margin_rerank_batch`` (multiply+reduce over d, per-row), so the
+    values are bit-identical to what any index computes for the same rows —
+    the property the cluster router's cross-shard re-rank leans on.
+    """
+    cx = x[jnp.clip(candidates, 0, x.shape[0] - 1)]
+    m = jnp.abs(jnp.sum(cx * w_batch[:, None, :], axis=-1))
+    m = m / jnp.maximum(jnp.linalg.norm(w_batch, axis=1, keepdims=True), 1e-12)
+    return jnp.where(valid, m, jnp.inf)
+
+
+@jax.jit
+def margin_batch_segmented(base_x, delta_x, split, w_batch, candidates,
+                           valid):
+    """``margin_batch`` over the LSM base+delta two-segment row space.
+
+    Rows < ``split`` (traced) gather from base_x, rows >= split from
+    delta_x at offset row - split; same clipped-gather + where construction
+    as ``margin_rerank_segmented``, so the margins equal a monolithic
+    ``margin_batch`` over the concatenated live rows bit for bit.
+    """
+    is_base = candidates < split
+    cb = base_x[jnp.clip(candidates, 0, base_x.shape[0] - 1)]
+    cd = delta_x[jnp.clip(candidates - split, 0, delta_x.shape[0] - 1)]
+    cx = jnp.where(is_base[..., None], cb, cd)
+    m = jnp.abs(jnp.sum(cx * w_batch[:, None, :], axis=-1))
+    m = m / jnp.maximum(jnp.linalg.norm(w_batch, axis=1, keepdims=True), 1e-12)
+    return jnp.where(valid, m, jnp.inf)

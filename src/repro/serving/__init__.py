@@ -10,12 +10,20 @@
 # admission control, and write requests interleaved with query flushes.
 # RefreshManager closes the learning loop: online re-learn of the bilinear
 # projections from accumulated rows, shadow rebuild, and a zero-downtime
-# generation swap under the index lock.
+# generation swap under the index lock.  ShardReplicaRouter is the
+# robustness tier: R-way replicated row shards behind the same index
+# surface, with deadline failover, health hysteresis, and degraded
+# (partial-coverage) answers instead of errors; faults.FaultPlan scripts
+# deterministic chaos at its replica-call seam.
 from repro.serving.async_service import (AsyncHashQueryService,
                                          DeadlineBatcher, QueueFullError,
                                          ServiceClosedError)
 from repro.serving.batch_query import (batched_rerank, hash_database_all,
                                        hash_queries_all, pad_candidates)
+from repro.serving.cluster import (ShardCallTimeout, ShardReplicaRouter,
+                                   ShardUnavailableError)
+from repro.serving.faults import (DroppedResponse, FaultError, FaultPlan,
+                                  ReplicaKilled)
 from repro.serving.lsm import LSMMultiTableIndex
 from repro.serving.multi_table import BatchQueryResult, MultiTableIndex
 from repro.serving.refresh import RefreshManager

@@ -170,6 +170,7 @@ class AsyncHashQueryService:
     _GUARDED_BY = {
         "_batcher": "_cond", "_closed": "_cond",
         "submitted": "_cond", "completed": "_cond", "shed": "_cond",
+        "_admit_window": "_cond",
         "flushes": "_cond", "batch_sizes": "_cond", "latencies_s": "_cond",
         "service": "_service_lock",
     }
@@ -201,6 +202,10 @@ class AsyncHashQueryService:
         self.submitted = 0
         self.completed = 0
         self.shed = 0
+        # sliding admission window (1 = shed, 0 = admitted) so stats() can
+        # report a shed RATE over recent traffic, not a lifetime ratio that
+        # an old burst pins forever
+        self._admit_window: deque[int] = deque(maxlen=4096)
         self.flushes = 0
         self.batch_sizes: Counter[int] = Counter()
         self.latencies_s: deque[float] = deque(maxlen=65536)
@@ -229,10 +234,30 @@ class AsyncHashQueryService:
                 self._batcher.offer(req, req.t_submit)
             except QueueFullError:
                 self.shed += 1
+                self._admit_window.append(1)
                 raise
             self.submitted += 1
+            self._admit_window.append(0)
             self._cond.notify_all()
         return req.future
+
+    def submit_with_retry(self, w, mask=None, attempts: int = 4,
+                          backoff_ms: float = 2.0) -> Future:
+        """``submit`` that retries through QueueFullError with exponential
+        backoff — the canonical caller-side response to shedding: back off,
+        let the flush loop drain, try again.  Sleeps backoff_ms, 2x, 4x …
+        between attempts and re-raises the final QueueFullError so callers
+        still see sustained overload.  Other errors (ServiceClosedError)
+        propagate immediately."""
+        attempts = max(1, int(attempts))
+        for k in range(attempts):
+            try:
+                return self.submit(w, mask)
+            except QueueFullError:
+                if k + 1 >= attempts:
+                    raise
+            time.sleep(backoff_ms * 1e-3 * (2 ** k))
+        raise AssertionError("unreachable")
 
     def _submit_write(self, kind: str, payload) -> Future:
         """Enqueue a write through the same bounded queue / deadline policy
@@ -248,8 +273,10 @@ class AsyncHashQueryService:
                 self._batcher.offer(req, req.t_submit)
             except QueueFullError:
                 self.shed += 1
+                self._admit_window.append(1)
                 raise
             self.submitted += 1
+            self._admit_window.append(0)
             self._cond.notify_all()
         return req.future
 
@@ -452,10 +479,14 @@ class AsyncHashQueryService:
         with self._cond:
             lat = (np.asarray(self.latencies_s) if self.latencies_s
                    else np.zeros(1))
+            win = self._admit_window
             return {
                 "submitted": self.submitted,
                 "completed": self.completed,
                 "shed": self.shed,
+                # fraction of the last len(win) submit attempts shed —
+                # the live overload signal (0.0 when no attempts yet)
+                "shed_rate": (sum(win) / len(win)) if win else 0.0,
                 "queue_depth": self._batcher.depth,
                 "flushes": self.flushes,
                 "mean_batch": self.completed / max(self.flushes, 1),

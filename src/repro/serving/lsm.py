@@ -70,9 +70,9 @@ from jax.sharding import PartitionSpec as P
 from repro.core.indexer import IndexConfig
 from repro.core.search import (DIST_SENTINEL, _pad_topk, drop_tombstones_topk,
                                hamming_topk_grouped,
-                               hamming_topk_grouped_sharded,
-                               margin_rerank_batch, margin_rerank_segmented,
-                               merge_topk_segments)
+                               hamming_topk_grouped_sharded, margin_batch,
+                               margin_batch_segmented, margin_rerank_batch,
+                               margin_rerank_segmented, merge_topk_segments)
 from repro.core.tables import SingleHashTable
 from repro.serving import batch_query as bq
 from repro.serving.multi_table import BatchQueryResult, MultiTableIndex
@@ -1002,6 +1002,97 @@ class LSMMultiTableIndex(MultiTableIndex):
             lookup_s, rerank_s, hits,
             ids_topk=top_ids if topk > 1 else None,
             margins_topk=margins if topk > 1 else None)
+
+    # -- replicated-shard serving hooks (serving.cluster) --------------------
+
+    def scan_table_topk(self, w, l: int = 16, mesh=None,
+                        shard_axis: str = "data"
+                        ) -> tuple[np.ndarray, np.ndarray]:
+        """Two-segment override of the parent hook: scan base + delta and
+        merge through merge_topk_segments BEFORE translating to stable ids,
+        so the returned per-table lists carry the identical (dist, id)
+        order a monolithic scan over the live rows would produce.  All
+        geometry/handles snapshot under one lock hold, as in
+        query_scan_batch."""
+        self._require_fit("scan_table_topk")
+        w = np.atleast_2d(np.asarray(w, np.float32))
+        b = w.shape[0]
+        cfg = self.config
+        with self._lock:
+            split = self._base_len
+            rows = self._rows
+            ids_view = self.ids_np
+            active_view = self._active_buf[:rows]
+            n_live = int(active_view.sum())
+            if n_live == 0:
+                return (np.full((self.num_tables, b, l), DIST_SENTINEL,
+                                np.int32),
+                        np.full((self.num_tables, b, l), -1, np.int64))
+            base_dead = split - int(active_view[:split].sum())
+            delta_len = rows - split
+            delta_dead = delta_len - int(active_view[split:rows].sum())
+            base_codes = (self._base_codes_state(mesh, shard_axis)
+                          if split else None)
+            base_active = self._base_active_state() if split else None
+            delta = self._delta_state() if delta_len else None
+            bcap = (self._bcap if mesh is None
+                    else _pow2_at_least(split, _MIN_CAP))
+            dcap = _pow2_at_least(delta_len, self._delta_floor)
+            fams = self.families
+        qcodes = bq.hash_queries_all(fams, w, use_kernels=cfg.use_kernels)
+        select = cfg.fused_select
+        pack = cfg.cand_pack
+        d_m = i_m = None
+        if base_codes is not None:
+            d_m, i_m = self._scan_segment(
+                base_codes, qcodes, l, split, bcap, base_dead, base_active,
+                cfg.use_kernels, select, pack, mesh, shard_axis)
+        if delta is not None:
+            delta_codes, _, delta_active = delta
+            fused = cfg.use_kernels and delta_len >= cfg.lsm_delta_fused_rows
+            d_d, i_d = self._scan_segment(
+                delta_codes, qcodes, l, delta_len, dcap, delta_dead,
+                delta_active, fused, select, pack, None, shard_axis)
+            i_d = jnp.where(i_d < 0, jnp.int32(-1), i_d + jnp.int32(split))
+            if d_m is None:
+                d_m, i_m = d_d, i_d
+            else:
+                d_m, i_m = merge_topk_segments(d_m, i_m, d_d, i_d, l)
+        i_np = np.asarray(i_m, dtype=np.int64)
+        ids = np.where(i_np >= 0, ids_view[np.clip(i_np, 0, rows - 1)], -1)
+        return np.asarray(d_m, dtype=np.int32), ids
+
+    def candidate_margins(self, w, cand_ids: np.ndarray) -> np.ndarray:
+        """Segmented override: margins gather from the device-resident base
+        features plus the small delta upload (core.search.
+        margin_batch_segmented), bit-identical to the parent's monolithic
+        gather.  Unresolvable ids (pad slots, or rows compacted away
+        between the router's scan and this call) come back +inf."""
+        self._require_fit("candidate_margins")
+        w = np.atleast_2d(np.asarray(w, np.float32))
+        cand_ids = np.asarray(cand_ids, dtype=np.int64)
+        with self._lock:
+            split = self._base_len
+            delta_len = self._rows - split
+            base_x = self._base_x_state()
+            delta_x = self._delta_state()[1] if delta_len else None
+            next_id = self._next_id
+            row_of = self._row_of          # old buffers stay valid views
+        known = (cand_ids >= 0) & (cand_ids < next_id)
+        rows = np.zeros(cand_ids.shape, dtype=np.int64)
+        rows[known] = row_of[cand_ids[known]]
+        valid = known & (rows >= 0)
+        rows[~valid] = 0
+        w_dev = jnp.asarray(w, jnp.float32)
+        rows_dev, valid_dev = jnp.asarray(rows), jnp.asarray(valid)
+        if delta_len == 0:
+            m = margin_batch(base_x, w_dev, rows_dev, valid_dev)
+        elif split == 0:
+            m = margin_batch(delta_x, w_dev, rows_dev, valid_dev)
+        else:
+            m = margin_batch_segmented(base_x, delta_x, jnp.int32(split),
+                                       w_dev, rows_dev, valid_dev)
+        return np.asarray(m, dtype=np.float32)
 
     # -- counters ------------------------------------------------------------
 

@@ -29,8 +29,8 @@ from jax.sharding import PartitionSpec as P
 from repro.core import functions as F
 from repro.core import learning as L
 from repro.core.indexer import IndexConfig, QueryResult
-from repro.core.search import (hamming_topk_grouped,
-                               hamming_topk_grouped_sharded,
+from repro.core.search import (DIST_SENTINEL, hamming_topk_grouped,
+                               hamming_topk_grouped_sharded, margin_batch,
                                margin_rerank_batch)
 from repro.core.tables import SingleHashTable, keys_of
 from repro.serving import batch_query as bq
@@ -49,6 +49,12 @@ class BatchQueryResult:
                              # slots (B·min(l, n_live), uniform by design)
     ids_topk: np.ndarray | None = None      # (B, l) when queried with l > 1
     margins_topk: np.ndarray | None = None  # (B, l), +inf past the valid set
+    # replicated-shard serving (serving.cluster): fraction of the live rows
+    # the answer actually scanned, and whether any shard had to be skipped
+    # (all replicas down / past deadline).  Single-index paths always answer
+    # over every live row, so the defaults make this a no-op for them.
+    coverage: float = 1.0
+    degraded: bool = False
 
 
 class MultiTableIndex:
@@ -491,6 +497,80 @@ class MultiTableIndex:
             lookup_s, rerank_s, hits,
             ids_topk=top if topk > 1 else None,
             margins_topk=margins if topk > 1 else None)
+
+    # -- replicated-shard serving hooks (serving.cluster) --------------------
+    #
+    # The cluster router merges per-SHARD results at the Hamming level
+    # (before any re-rank) so partial-shard unions keep the (dist, id) tie
+    # contract — see core.search.merge_topk_shards.  These two hooks expose
+    # exactly the pieces the router needs: the pre-merge per-table top-l in
+    # stable-id space, and per-candidate margins with no selection.
+
+    def scan_table_topk(self, w, l: int = 16, mesh=None,
+                        shard_axis: str = "data"
+                        ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-table Hamming top-l surfaced PRE-merge, in stable-id space.
+
+        Returns host arrays (dists (L, B, l) int32, ids (L, B, l) int64),
+        each (table, query) list sorted ascending by (distance, stable id)
+        with (DIST_SENTINEL, -1) sentinels in impossible slots — exactly
+        the lists ``query_scan_batch`` deduplicates internally.  Stable ids
+        ascend with rows, so the scan's (distance, live-row) order IS
+        (distance, id) order and no re-sort is needed after translation.
+        """
+        self._require_fit("scan_table_topk")
+        w = np.atleast_2d(np.asarray(w, np.float32))
+        b = w.shape[0]
+        if not self.active.any():
+            return (np.full((self.num_tables, b, l), DIST_SENTINEL,
+                            np.int32),
+                    np.full((self.num_tables, b, l), -1, np.int64))
+        codes_dev, live_rows_dev = self._scan_state(mesh, shard_axis)
+        n_live = self._live_rows.shape[0]
+        qcodes = bq.hash_queries_all(
+            self.families, w, use_kernels=self.config.use_kernels)
+        select = self.config.fused_select
+        pack = self.config.cand_pack
+        if mesh is not None:
+            dists, idx = hamming_topk_grouped_sharded(
+                codes_dev, qcodes, l, mesh, axis=shard_axis,
+                use_kernel=self.config.use_kernels, n_valid=n_live,
+                select=select, pack=pack)
+        elif self.config.use_kernels:
+            from repro.kernels import ops
+            dists, idx = ops.hamming_topk_grouped(codes_dev, qcodes, l,
+                                                  select=select, pack=pack)
+        else:
+            dists, idx = hamming_topk_grouped(codes_dev, qcodes, l,
+                                              select=select)
+        idx_np = np.asarray(idx, dtype=np.int64)
+        grows = np.asarray(self._live_rows)[np.clip(idx_np, 0, n_live - 1)]
+        ids = np.where(idx_np >= 0, self.ids_np[grows], -1)
+        return np.asarray(dists, dtype=np.int32), ids
+
+    def candidate_margins(self, w, cand_ids: np.ndarray) -> np.ndarray:
+        """Exact margins for an externally-chosen candidate set, by id.
+
+        cand_ids: (B, C) stable ids, -1 in pad slots.  Returns (B, C)
+        float32 margins aligned to the candidate positions, +inf wherever
+        the slot is padding or the id no longer resolves (compacted away
+        mid-flight).  Values are bit-identical to what query_scan_batch's
+        re-rank computes for the same rows (core.search.margin_batch shares
+        the per-row margin expression), which is what lets the cluster
+        router re-rank a cross-shard candidate union without losing the
+        single-index answer contract.
+        """
+        self._require_fit("candidate_margins")
+        w = np.atleast_2d(np.asarray(w, np.float32))
+        cand_ids = np.asarray(cand_ids, dtype=np.int64)
+        known = (cand_ids >= 0) & (cand_ids < self._next_id)
+        rows = np.zeros(cand_ids.shape, dtype=np.int64)
+        rows[known] = self._row_of[cand_ids[known]]
+        valid = known & (rows >= 0)
+        rows[~valid] = 0
+        m = margin_batch(self.x, jnp.asarray(w, jnp.float32),
+                         jnp.asarray(rows), jnp.asarray(valid))
+        return np.asarray(m, dtype=np.float32)
 
     def stats(self) -> dict:
         per_table = [t.stats() for t in self.tables]

@@ -100,6 +100,8 @@ class RefreshManager:
         self._recent_w: deque[np.ndarray] = deque(maxlen=int(recent_queries))
         self.refreshes_started = 0
         self.refreshes_done = 0
+        self.refreshes_failed = 0
+        self.last_error: str | None = None
         self.last_learn_s = 0.0
         self.last_build_s = 0.0
         self.last_swap_pause_s = 0.0
@@ -153,7 +155,7 @@ class RefreshManager:
         if wait:
             return self._run_guarded(warm_batches, warm_l)
         t = threading.Thread(target=self._run_guarded,
-                             args=(warm_batches, warm_l),
+                             args=(warm_batches, warm_l, False),
                              name="index-refresh", daemon=True)
         with self._mu:
             self._thread = t
@@ -167,9 +169,27 @@ class RefreshManager:
         if t is not None:
             t.join(timeout)
 
-    def _run_guarded(self, warm_batches, warm_l) -> bool:
+    def _run_guarded(self, warm_batches, warm_l,
+                     reraise: bool = True) -> bool:
+        """Run one cycle and ALWAYS release the busy flag.  A failure
+        anywhere before the swap leaves the live index untouched (phases
+        1-4 only read it — the shadow is private), so the contract on
+        error is: live generation unchanged, no locks held, next
+        ``refresh()`` free to run.  wait=True callers get the exception
+        re-raised; the background worker records it (``last_error``,
+        ``refreshes_failed``) instead of dying with an unhandled
+        traceback."""
         try:
-            return self._run(warm_batches, warm_l)
+            ok = self._run(warm_batches, warm_l)
+        except BaseException as e:
+            self.refreshes_failed += 1
+            self.last_error = f"{type(e).__name__}: {e}"
+            if reraise:
+                raise
+            return False
+        else:
+            self.last_error = None
+            return ok
         finally:
             with self._mu:
                 self._busy = False
@@ -309,6 +329,8 @@ class RefreshManager:
             "busy": busy,
             "refreshes_started": self.refreshes_started,
             "refreshes_done": self.refreshes_done,
+            "refreshes_failed": self.refreshes_failed,
+            "last_error": self.last_error,
             "last_learn_s": self.last_learn_s,
             "last_build_s": self.last_build_s,
             "last_swap_pause_ms": 1e3 * self.last_swap_pause_s,

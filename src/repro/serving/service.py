@@ -80,6 +80,11 @@ class HashQueryService:
         self.inserted_rows = 0
         self.deletes = 0
         self.deleted_rows = 0
+        # degraded-answer observability (scan answers from a
+        # ShardReplicaRouter carry coverage/degraded; monolithic indexes
+        # always report full coverage)
+        self.degraded_batches = 0
+        self.last_coverage = 1.0
         # online refresh (serving.refresh): available when the index
         # supports the generation swap (the LSM index); created eagerly so
         # concurrent first triggers can't race a lazy constructor
@@ -257,6 +262,9 @@ class HashQueryService:
                                           mesh=self.mesh,
                                           shard_axis=self.shard_axis)
         elapsed = time.perf_counter() - t_start
+        self.last_coverage = float(getattr(res, "coverage", 1.0))
+        if getattr(res, "degraded", False):
+            self.degraded_batches += 1
         self.requests += b
         self.batches += 1
         self.busy_s += elapsed
@@ -289,6 +297,8 @@ class HashQueryService:
             "inserted_rows": self.inserted_rows,
             "deletes": self.deletes,
             "deleted_rows": self.deleted_rows,
+            "degraded_batches": self.degraded_batches,
+            "last_coverage": self.last_coverage,
             # index-side observability: transfer and compaction work done
             # under this service's traffic (serving.lsm exists to keep the
             # first two flat under insert streams — see multi_table counters)

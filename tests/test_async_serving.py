@@ -282,3 +282,47 @@ def test_async_selector_matches_sync_selector(corpus):
             assert p_s == p_a
     st = sel_async.service.stats()
     assert st["completed"] == 5
+
+
+def test_submit_with_retry_backs_off_then_succeeds(index, queries,
+                                                   monkeypatch):
+    svc = AsyncHashQueryService(index, max_batch=4, max_queue=4,
+                                deadline_ms=5.0, clock=FakeClock(),
+                                start=False)
+    calls = {"n": 0}
+    real = svc.submit
+
+    def flaky(w, mask=None):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise QueueFullError("full")
+        return real(w, mask)
+
+    monkeypatch.setattr(svc, "submit", flaky)
+    slept: list[float] = []
+    monkeypatch.setattr("repro.serving.async_service.time.sleep",
+                        slept.append)
+    fut = svc.submit_with_retry(queries[0], attempts=4, backoff_ms=2.0)
+    assert calls["n"] == 3
+    assert slept == [0.002, 0.004]          # exponential backoff
+    svc.close(drain=True)
+    assert fut.result(timeout=5) is not None
+
+
+def test_submit_with_retry_exhausts_and_shed_rate_windows(index, queries,
+                                                          monkeypatch):
+    svc = AsyncHashQueryService(index, max_batch=2, max_queue=2,
+                                deadline_ms=1000.0, clock=FakeClock(),
+                                start=False)
+    monkeypatch.setattr("repro.serving.async_service.time.sleep",
+                        lambda s: None)
+    assert svc.stats()["shed_rate"] == 0.0
+    svc.submit(queries[0])
+    svc.submit(queries[1])                  # queue now full
+    with pytest.raises(QueueFullError):
+        svc.submit_with_retry(queries[2], attempts=3, backoff_ms=1.0)
+    st = svc.stats()
+    assert st["shed"] == 3                  # every attempt shed + counted
+    assert st["shed_rate"] == pytest.approx(3 / 5)   # over 2 admits + 3 sheds
+    svc.close(drain=True)
+    assert svc.stats()["completed"] == 2

@@ -1,0 +1,421 @@
+"""Replicated-shard router: failover, fault injection, degraded answers.
+
+The load-bearing contract is bit-parity: a fully covered router answer
+must equal a monolithic index over all rows, and a PARTIAL answer must
+equal a fresh index built over only the covered shards' rows — ties,
+masks, and l > n sentinels included (serving.cluster's two-phase merge
+protocol).  Fault scenarios are scripted through serving.faults.FaultPlan
+so every chaos test here is deterministic and replayable.
+"""
+import numpy as np
+import pytest
+
+from repro.core.indexer import IndexConfig
+from repro.serving import (FaultPlan, HashQueryService, LSMMultiTableIndex,
+                           ShardReplicaRouter)
+
+D = 12
+SHARDS = 3
+REPLICAS = 2
+
+
+def _cfg(**kw):
+    kw.setdefault("method", "bh")
+    kw.setdefault("bits", 12)
+    kw.setdefault("tables", 2)
+    kw.setdefault("seed", 3)
+    kw.setdefault("lsm_auto", False)
+    return IndexConfig(**kw)
+
+
+def _corpus(n=240, seed=0, dup_every=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, D)).astype(np.float32)
+    if dup_every:
+        # duplicate rows across shard boundaries: equal margins AND equal
+        # Hamming distances, so the (dist, id) / (margin, id) tie order is
+        # actually exercised by the cross-shard merge
+        x[dup_every::dup_every] = x[:n - dup_every:dup_every]
+    return x
+
+
+def _queries(b=8, seed=1):
+    return np.random.default_rng(seed).standard_normal((b, D)).astype(
+        np.float32)
+
+
+def _router(x, fault_plan=None, **kw):
+    kw.setdefault("shards", SHARDS)
+    kw.setdefault("replicas", REPLICAS)
+    kw.setdefault("deadline_ms", 2000.0)
+    r = ShardReplicaRouter(_cfg(), fault_plan=fault_plan, **kw)
+    r.fit(x)
+    return r
+
+
+def _assert_same_answer(res_a, res_b, id_map=None):
+    """res_a (router) must equal res_b (reference); id_map translates the
+    reference's ids into global-id space (covered-rows references hand out
+    dense local ids)."""
+    ids_b = res_b.ids_topk
+    if id_map is not None:
+        ids_b = np.where(ids_b >= 0, id_map[np.clip(ids_b, 0, None)], -1)
+    assert np.array_equal(res_a.ids_topk, ids_b)
+    assert np.array_equal(res_a.margins_topk, res_b.margins_topk)
+    assert np.array_equal(res_a.nonempty, res_b.nonempty)
+    assert np.array_equal(res_a.table_hits, res_b.table_hits)
+    for ca, cb in zip(res_a.candidates, res_b.candidates):
+        cb = cb if id_map is None else id_map[cb]
+        assert np.array_equal(ca, np.sort(cb))
+
+
+# -- healthy-path parity -------------------------------------------------------
+
+
+def test_healthy_parity_bit_identical():
+    x = _corpus(dup_every=7)
+    router = _router(x)
+    ref = LSMMultiTableIndex(_cfg()).fit(x)
+    w = _queries()
+    res_r = router.query_scan_batch(w, l=16, topk=4)
+    res_f = ref.query_scan_batch(w, l=16, topk=4)
+    assert res_r.coverage == 1.0 and not res_r.degraded
+    _assert_same_answer(res_r, res_f)
+
+
+def test_healthy_parity_after_writes():
+    x = _corpus()
+    router = _router(x)
+    ref = LSMMultiTableIndex(_cfg()).fit(x)
+    gids = router.insert(x[:17] * 0.5)
+    assert np.array_equal(gids, ref.insert(x[:17] * 0.5))
+    for ids in ([3, 50, 241], [7]):
+        router.delete(ids)
+        ref.delete(ids)
+    w = _queries()
+    res_r = router.query_scan_batch(w, l=16, topk=3)
+    res_f = ref.query_scan_batch(w, l=16, topk=3)
+    assert res_r.coverage == 1.0
+    _assert_same_answer(res_r, res_f)
+
+
+def test_mask_parity():
+    x = _corpus()
+    router = _router(x)
+    ref = LSMMultiTableIndex(_cfg()).fit(x)
+    mask = np.zeros(x.shape[0], dtype=bool)
+    mask[::3] = True
+    w = _queries()
+    res_r = router.query_scan_batch(w, l=16, topk=3, mask=mask)
+    res_f = ref.query_scan_batch(w, l=16, topk=3, mask=mask)
+    _assert_same_answer(res_r, res_f)
+
+
+# -- the degraded-mode contract ------------------------------------------------
+
+
+def _covered_rows(n, down_shard):
+    return np.sort(np.concatenate(
+        [np.arange(s, n, SHARDS) for s in range(SHARDS) if s != down_shard]))
+
+
+def test_partial_union_bit_identical_to_covered_index():
+    """ALL replicas of one shard down: the answer must be bit-identical to
+    a fresh index over only the covered shards' rows — duplicates (ties)
+    included — with coverage reporting the covered live fraction."""
+    x = _corpus(dup_every=7)
+    plan = FaultPlan()
+    router = _router(x, fault_plan=plan)
+    for r in range(REPLICAS):
+        plan.kill(0, r)
+    w = _queries()
+    res_d = router.query_scan_batch(w, l=16, topk=4)
+    assert res_d.degraded
+    cov = _covered_rows(x.shape[0], down_shard=0)
+    assert res_d.coverage == pytest.approx(cov.size / x.shape[0])
+    ref = LSMMultiTableIndex(_cfg()).fit(x[cov])
+    res_c = ref.query_scan_batch(w, l=16, topk=4)
+    _assert_same_answer(res_d, res_c, id_map=cov)
+
+
+def test_partial_union_sentinels_when_l_exceeds_covered():
+    """topk past the covered row count pads with (margin=inf, id=-1)
+    exactly like a fresh index with too few rows does."""
+    x = _corpus(n=9)
+    plan = FaultPlan()
+    router = _router(x, fault_plan=plan)
+    for r in range(REPLICAS):
+        plan.kill(1, r)
+    w = _queries(b=3)
+    res_d = router.query_scan_batch(w, l=32, topk=12)
+    cov = _covered_rows(9, down_shard=1)
+    ref = LSMMultiTableIndex(_cfg()).fit(x[cov])
+    res_c = ref.query_scan_batch(w, l=32, topk=12)
+    _assert_same_answer(res_d, res_c, id_map=cov)
+    assert (res_d.ids_topk[:, cov.size:] == -1).all()
+    assert np.isinf(res_d.margins_topk[:, cov.size:]).all()
+
+
+def test_all_replicas_down_answers_instead_of_raising():
+    x = _corpus()
+    plan = FaultPlan()
+    router = _router(x, fault_plan=plan)
+    for s in range(SHARDS):
+        for r in range(REPLICAS):
+            plan.kill(s, r)
+    res = router.query_scan_batch(_queries(), l=16, topk=2)
+    assert res.degraded and res.coverage == 0.0
+    assert (res.ids_topk == -1).all()
+    assert np.isinf(res.margins_topk).all()
+    assert not res.nonempty.any()
+
+
+# -- failover ladder -----------------------------------------------------------
+
+
+def test_single_replica_kill_fails_over_exactly():
+    x = _corpus()
+    plan = FaultPlan()
+    router = _router(x, fault_plan=plan)
+    ref = LSMMultiTableIndex(_cfg()).fit(x)
+    plan.kill(0, 0)
+    plan.kill(1, 1)
+    w = _queries()
+    # two queries so the rotation visits BOTH replicas of each shard —
+    # a killed replica is only detected when the ladder actually tries it
+    for _ in range(2):
+        res_r = router.query_scan_batch(w, l=16, topk=3)
+        assert res_r.coverage == 1.0 and not res_r.degraded
+        _assert_same_answer(res_r, ref.query_scan_batch(w, l=16, topk=3))
+    st = router.stats()
+    assert st["replica_downs"] == 2
+    assert st["failovers"] >= 1
+
+
+def test_deadline_timeout_fails_over_exactly():
+    """A scripted delay past the deadline must read as a dead replica: the
+    ladder retries the sibling and the answer stays exact."""
+    x = _corpus()
+    plan = FaultPlan()
+    # first query's rotation starts at replica 1; stall its first call
+    plan.delay_at(0, 1, 0, ms=500.0)
+    router = _router(x, fault_plan=plan, deadline_ms=100.0)
+    ref = LSMMultiTableIndex(_cfg()).fit(x)
+    w = _queries()
+    res_r = router.query_scan_batch(w, l=16, topk=3)
+    assert res_r.coverage == 1.0
+    _assert_same_answer(res_r, ref.query_scan_batch(w, l=16, topk=3))
+    assert router.stats()["timeouts"] >= 1
+
+
+def test_dropped_response_fails_over_exactly():
+    x = _corpus()
+    plan = FaultPlan()
+    plan.drop_at(0, 1, 0)
+    router = _router(x, fault_plan=plan)
+    ref = LSMMultiTableIndex(_cfg()).fit(x)
+    w = _queries()
+    res_r = router.query_scan_batch(w, l=16, topk=3)
+    assert res_r.coverage == 1.0
+    _assert_same_answer(res_r, ref.query_scan_batch(w, l=16, topk=3))
+    assert router.stats()["failovers"] >= 1
+
+
+# -- health hysteresis + catch-up ----------------------------------------------
+
+
+def test_readmit_requires_consecutive_probes():
+    x = _corpus()
+    plan = FaultPlan()
+    router = _router(x, fault_plan=plan, readmit_probes=2)
+    plan.kill(2, 0)
+    w = _queries(b=2)
+    for _ in range(2):                  # rotation must actually try (2, 0)
+        router.query_scan_batch(w)
+    assert not router.health()[2][0]["alive"]
+    plan.revive(2, 0)
+    router.query_scan_batch(w)          # probe success 1 of 2
+    assert not router.health()[2][0]["alive"]
+    router.query_scan_batch(w)          # probe success 2 of 2 -> readmit
+    assert router.health()[2][0]["alive"]
+    assert router.stats()["readmits"] == 1
+
+
+def test_flapping_replica_does_not_thrash_back_in():
+    """A replica that dies again mid-hysteresis restarts its probe count:
+    one flap window shorter than readmit_probes never re-admits."""
+    x = _corpus()
+    plan = FaultPlan()
+    router = _router(x, fault_plan=plan, readmit_probes=3)
+    plan.kill(2, 0)
+    w = _queries(b=2)
+    for _ in range(2):                  # rotation must actually try (2, 0)
+        router.query_scan_batch(w)
+    assert not router.health()[2][0]["alive"]
+    plan.revive(2, 0)
+    router.query_scan_batch(w)          # probe ok (1/3)
+    plan.kill(2, 0)
+    router.query_scan_batch(w)          # probe fails -> count resets
+    assert not router.health()[2][0]["alive"]
+    plan.revive(2, 0)
+    for _ in range(3):
+        router.query_scan_batch(w)
+    assert router.health()[2][0]["alive"]
+
+
+def test_recovered_replica_catches_up_missed_writes():
+    """Writes that land while a replica is down are repaired from the
+    router's row log at re-admission (the refresh shadow-build path), and
+    post-recovery answers are bit-identical to a fresh full index."""
+    x = _corpus()
+    plan = FaultPlan()
+    router = _router(x, fault_plan=plan, readmit_probes=2)
+    ref = LSMMultiTableIndex(_cfg()).fit(x)
+    plan.kill(1, 0)
+    w = _queries()
+    router.query_scan_batch(w)          # demote (1, 0)
+    extra = _corpus(n=13, seed=9)
+    assert np.array_equal(router.insert(extra), ref.insert(extra))
+    router.delete([1, 4, 245])
+    ref.delete([1, 4, 245])
+    h = router.health()[1][0]
+    assert not h["alive"] and h["applied"] < h["writes"]
+    plan.revive(1, 0)
+    for _ in range(3):
+        res = router.query_scan_batch(w, l=16, topk=3)
+    assert router.health()[1][0]["alive"]
+    assert router.health()[1][0]["applied"] == router.health()[1][0]["writes"]
+    assert router.stats()["catchups"] == 1
+    assert res.coverage == 1.0
+    _assert_same_answer(res, ref.query_scan_batch(w, l=16, topk=3))
+    # the caught-up replica answers alone: kill its sibling and re-check
+    plan.kill(1, 1)
+    res2 = router.query_scan_batch(w, l=16, topk=3)
+    assert res2.coverage == 1.0
+    _assert_same_answer(res2, ref.query_scan_batch(w, l=16, topk=3))
+
+
+def test_whole_shard_outage_with_writes_recovers_to_parity():
+    """Writes always succeed logically even with a WHOLE shard down; after
+    revive + hysteresis both replicas rebuild from the row log and the
+    cluster returns to full coverage and bit-parity."""
+    x = _corpus()
+    plan = FaultPlan()
+    router = _router(x, fault_plan=plan, readmit_probes=2)
+    ref = LSMMultiTableIndex(_cfg()).fit(x)
+    for r in range(REPLICAS):
+        plan.kill(0, r)
+    extra = _corpus(n=11, seed=7)
+    assert np.array_equal(router.insert(extra), ref.insert(extra))
+    router.delete([0, 9])               # gid 0 and 9 live in shard 0
+    ref.delete([0, 9])
+    w = _queries()
+    assert router.query_scan_batch(w).degraded
+    for r in range(REPLICAS):
+        plan.revive(0, r)
+    steps = 0
+    while steps < 6:
+        steps += 1
+        res = router.query_scan_batch(w, l=16, topk=3)
+        if res.coverage == 1.0:
+            break
+    assert res.coverage == 1.0 and steps <= 3
+    assert router.stats()["catchups"] == REPLICAS
+    _assert_same_answer(res, ref.query_scan_batch(w, l=16, topk=3))
+
+
+# -- delete validation ---------------------------------------------------------
+
+
+def test_bad_delete_is_callers_error_not_a_health_event():
+    x = _corpus()
+    router = _router(x)
+    with pytest.raises(KeyError):
+        router.delete([10 ** 6])
+    router.delete([5])
+    with pytest.raises(KeyError):
+        router.delete([5])              # already deleted
+    with pytest.raises(KeyError):
+        router.delete([7, 7])           # duplicates
+    assert all(h["alive"] for row in router.health() for h in row)
+
+
+# -- service integration -------------------------------------------------------
+
+
+def test_service_over_router_matches_service_over_index():
+    x = _corpus()
+    router = _router(x)
+    ref = LSMMultiTableIndex(_cfg()).fit(x)
+    svc_r = HashQueryService(router, mode="scan", scan_l=16)
+    svc_f = HashQueryService(ref, mode="scan", scan_l=16)
+    assert svc_r.refresher is None      # probe/refresh surface not claimed
+    w = _queries(b=10)
+    for a, b in zip(svc_r.query_batch(w), svc_f.query_batch(w)):
+        assert a.index == b.index and a.margin == b.margin
+        assert np.array_equal(a.candidates, b.candidates)
+    st = svc_r.stats()
+    assert st["degraded_batches"] == 0 and st["last_coverage"] == 1.0
+
+
+def test_service_surfaces_degraded_coverage():
+    x = _corpus()
+    plan = FaultPlan()
+    router = _router(x, fault_plan=plan)
+    svc = HashQueryService(router, mode="scan", scan_l=16)
+    for r in range(REPLICAS):
+        plan.kill(0, r)
+    svc.query_batch(_queries(b=4))
+    st = svc.stats()
+    assert st["degraded_batches"] >= 1
+    assert 0.0 < st["last_coverage"] < 1.0
+
+
+# -- fault-plan determinism ----------------------------------------------------
+
+
+def test_seeded_plan_never_covers_a_whole_shard():
+    for seed in range(5):
+        plan = FaultPlan.seeded(seed, shards=SHARDS, replicas=REPLICAS)
+        killed = {(s, r) for (s, r, c), evs in plan._events.items()
+                  for ev in evs if ev[0] in ("kill", "flap")}
+        for s in range(SHARDS):
+            assert {(s, r) for r in range(REPLICAS)} - killed, \
+                f"seed {seed} kills every replica of shard {s}"
+
+
+def test_seeded_soak_is_replayable_and_exception_free():
+    """Same seed, same driver sequence -> the same injected-fault log, no
+    uncaught exceptions, and full coverage throughout (the seeded plan
+    always leaves one live replica per shard)."""
+    x = _corpus()
+    w = _queries(b=4)
+
+    def drive(plan):
+        router = _router(x, fault_plan=plan, readmit_probes=1,
+                         deadline_ms=2000.0)
+        coverages = []
+        for i in range(12):
+            if i % 4 == 3:
+                router.insert(_corpus(n=3, seed=100 + i))
+            if i == 7:
+                router.delete([2])
+            coverages.append(router.query_scan_batch(w, l=16).coverage)
+        return coverages, list(plan.log), router
+
+    cov_a, log_a, router_a = drive(
+        FaultPlan.seeded(11, SHARDS, REPLICAS, horizon_calls=40))
+    cov_b, log_b, _ = drive(
+        FaultPlan.seeded(11, SHARDS, REPLICAS, horizon_calls=40))
+    assert log_a == log_b and len(log_a) > 0
+    assert cov_a == cov_b
+    assert all(c == 1.0 for c in cov_a)
+    # end state: bit-parity against a fresh reference with the same writes
+    ref = LSMMultiTableIndex(_cfg()).fit(x)
+    for i in range(12):
+        if i % 4 == 3:
+            ref.insert(_corpus(n=3, seed=100 + i))
+        if i == 7:
+            ref.delete([2])
+    res_r = router_a.query_scan_batch(w, l=16, topk=3)
+    _assert_same_answer(res_r, ref.query_scan_batch(w, l=16, topk=3))

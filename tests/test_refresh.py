@@ -255,3 +255,61 @@ def test_traffic_weighted_pool_is_deterministic_and_bounded():
     # without traffic on record, the pool is the whole snapshot
     assert np.asarray(RefreshManager(idx)._learning_pool(x)).shape[0] \
         == x.shape[0]
+
+
+def test_refresh_failure_leaves_live_index_untouched(monkeypatch):
+    """learn_lbh raising mid-refresh must not corrupt the live index: the
+    generation stays, answers stay bit-identical, no lock is left held,
+    and the next refresh() runs (and succeeds) normally."""
+    import repro.core.learning as learning
+
+    rng = np.random.default_rng(10)
+    idx, x = _fit(rng)
+    w = rng.normal(size=(8, D)).astype(np.float32)
+    before = idx.query_scan_batch(w, l=16, topk=3)
+    gen0, ver0 = idx.generation, idx.version
+
+    def boom(*a, **k):
+        raise RuntimeError("learn exploded")
+
+    monkeypatch.setattr(learning, "learn_lbh", boom)
+    mgr = RefreshManager(idx)
+    with pytest.raises(RuntimeError, match="learn exploded"):
+        mgr.refresh(wait=True)
+    st = mgr.stats()
+    assert st["refreshes_failed"] == 1 and not st["busy"]
+    assert "learn exploded" in st["last_error"]
+    assert idx.generation == gen0 and idx.version == ver0
+    after = idx.query_scan_batch(w, l=16, topk=3)
+    assert np.array_equal(before.ids_topk, after.ids_topk)
+    assert np.array_equal(before.margins_topk, after.margins_topk)
+    # no lock left held: ingest proceeds and a subsequent refresh succeeds
+    idx.insert(rng.normal(size=(5, D)).astype(np.float32))
+    monkeypatch.undo()
+    assert mgr.refresh(wait=True)
+    assert idx.generation == gen0 + 1
+    assert mgr.stats()["last_error"] is None
+    assert mgr.stats()["refreshes_done"] == 1
+
+
+def test_background_refresh_failure_is_recorded_not_raised(monkeypatch):
+    """A failing background refresh must not die with an unhandled thread
+    traceback: the error is recorded in stats and the manager goes idle."""
+    import repro.core.learning as learning
+
+    rng = np.random.default_rng(11)
+    idx, _ = _fit(rng)
+
+    def boom(*a, **k):
+        raise RuntimeError("bg boom")
+
+    monkeypatch.setattr(learning, "learn_lbh", boom)
+    mgr = RefreshManager(idx)
+    assert mgr.refresh(wait=False)
+    mgr.wait_idle()
+    st = mgr.stats()
+    assert st["refreshes_failed"] == 1 and not st["busy"]
+    assert "bg boom" in st["last_error"]
+    monkeypatch.undo()
+    assert mgr.refresh(wait=True)
+    assert mgr.stats()["refreshes_done"] == 1
